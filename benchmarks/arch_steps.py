@@ -1,0 +1,56 @@
+"""Wall-clock step costs for every assigned architecture (reduced configs,
+CPU): one jitted train step + one decode step, µs/call CSV."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, list_archs
+from repro.configs.shapes import ShapeSpec, synthesize_batch
+from repro.models.registry import build_model
+from repro.optim import adamw
+from repro.parallel.ctx import ParallelCtx
+from repro.train.step import init_train_state, make_train_step
+
+PCTX = ParallelCtx(mesh=None)
+
+
+def _time_fn(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def arch_step_costs():
+    header = ["arch", "family", "train_us_per_step", "decode_us_per_step"]
+    rows = []
+    shape = ShapeSpec("bench", seq_len=64, global_batch=2, kind="train")
+    for arch in list_archs():
+        cfg = get_config(arch).smoke()
+        model = build_model(cfg)
+        opt = adamw(1e-3)
+        state = init_train_state(model, cfg, opt, jax.random.PRNGKey(0), max_dec_len=128)
+        batch = synthesize_batch(cfg, shape, seed=0)
+        step = jax.jit(make_train_step(model, cfg, PCTX, opt))
+        train_us = _time_fn(lambda s, b: step(s, b)[1]["loss"], state, batch)
+
+        params = state.params
+        caches = model.make_caches(2, 64)
+        if cfg.family == "encdec":
+            caches["enc_out"] = jnp.zeros((2, 16, cfg.d_model), jnp.float32)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        pos = jnp.full((2,), 3, jnp.int32)
+        from repro.serve.steps import make_decode_step
+
+        dstep = jax.jit(make_decode_step(model, cfg, PCTX))
+        decode_us = _time_fn(lambda p, c, t, q: dstep(p, c, t, q)[0], params, caches, tok, pos)
+        rows.append([arch, cfg.family, round(train_us, 1), round(decode_us, 1)])
+        jax.clear_caches()
+    return header, rows

@@ -1,0 +1,211 @@
+"""Reproductions of every table/figure in the paper, from the calibrated
+simulator + the full ML pipeline (regression → curve_fit → Eq. 6).
+
+Each function returns (header, rows) and is invoked by benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.autotune.heuristic import (
+    GOMEZ_LUNA_TAU_MS,
+    StreamHeuristic,
+    fit_stream_heuristic,
+    gomez_luna_optimum,
+)
+from repro.core.streams import (
+    PAPER_SIZES,
+    RTX_A5000,
+    STREAM_CANDIDATES,
+    StreamSimulator,
+)
+from repro.core.streams.timemodel import gain, overhead_from_measurement, sum_overlap
+
+# Paper reference values for side-by-side columns.
+PAPER_TABLE4 = {
+    1_000: (1, 1), 4_000: (1, 1), 5_000: (1, 1), 8_000: (1, 1), 10_000: (1, 1),
+    40_000: (1, 1), 50_000: (1, 1), 80_000: (1, 1), 100_000: (1, 2),
+    400_000: (4, 4), 500_000: (8, 4), 800_000: (8, 8), 1_000_000: (8, 8),
+    2_500_000: (16, 16), 4_000_000: (32, 32), 5_000_000: (32, 32),
+    7_500_000: (32, 32), 8_000_000: (32, 32), 10_000_000: (32, 32),
+    25_000_000: (32, 32), 40_000_000: (32, 32), 50_000_000: (32, 32),
+    75_000_000: (32, 32), 80_000_000: (32, 32), 100_000_000: (32, 32),
+}  # size -> (N_act, N_pre) from the paper
+
+
+def _fit(seed: int = 1):
+    sim = StreamSimulator(seed=seed)
+    data = sim.dataset(reps=2)
+    return sim, fit_stream_heuristic(data)
+
+
+def table1():
+    """Component times + Gómez-Luna [6] vs actual optimum streams."""
+    sim = StreamSimulator()
+    header = ["size", "T1_COMP", "T1_D2H", "T3_H2D", "T3_COMP", "sum",
+              "opt_streams_[6]", "actual_opt", "paper_[6]", "paper_actual"]
+    paper6 = {4_000: (7.8, 1), 40_000: (8.6, 1), 400_000: (15.8, 4),
+              4_000_000: (45.0, 32), 40_000_000: (139.8, 32)}
+    rows = []
+    for n in (4_000, 40_000, 400_000, 4_000_000, 40_000_000):
+        st = sim.components(n)
+        s = sum_overlap(st)
+        rows.append([
+            n, round(st.t1_comp, 6), round(st.t1_d2h, 6), round(st.t3_h2d, 6),
+            round(st.t3_comp, 6), round(s, 6),
+            round(gomez_luna_optimum(s), 1), sim.actual_optimum(n),
+            paper6[n][0], paper6[n][1],
+        ])
+    return header, rows
+
+
+def table2(n: int = 1_000_000):
+    """Overlap accounting at N=1e6 (the paper's illustrative example)."""
+    sim = StreamSimulator()
+    st = sim.components(n)
+    s = sum_overlap(st)
+    tns = sim.t_non_str_true(n)
+    header = ["num_str", "T_str", "T_non_str", "sum", "T_overhead", "margin_eq6"]
+    rows = []
+    for k in (2, 4, 8, 16, 32):
+        ts = sim.t_str_true(n, k)
+        ov = overhead_from_measurement(ts, tns, s, k)
+        rows.append([k, round(ts, 6), round(tns, 6), round(s, 6),
+                     round(ov, 6), round(gain(k, s, ov), 6)])
+    return header, rows
+
+
+def table3():
+    """Overhead-model fit metrics (small/big), train + test."""
+    _, h = _fit()
+    header = ["set", "metric", "model_small", "model_big", "paper_small", "paper_big"]
+    paper = {
+        ("training", "r2"): (0.9531711290769591, 0.9933780389080090),
+        ("training", "mse"): (0.0050126881205798, 0.2451169015984794),
+        ("training", "rmse"): (0.0708003398337877, 0.4950928211946518),
+        ("test", "r2"): (0.9549695579010460, 0.9896761975222511),
+        ("test", "mse"): (0.0044441139999724, 0.1447752928068124),
+        ("test", "rmse"): (0.0666641882870588, 0.3804934858927448),
+    }
+    rows = []
+    for set_, tag in (("training", "train"), ("test", "test")):
+        for metric in ("r2", "mse", "rmse"):
+            rows.append([
+                set_, metric,
+                round(h.metrics[f"ov_small_{tag}"][metric], 6),
+                round(h.metrics[f"ov_big_{tag}"][metric], 6),
+                *(round(v, 6) for v in paper[(set_, metric)]),
+            ])
+    return header, rows
+
+
+def table4():
+    """Predicted vs actual optimum streams for all 25 sizes."""
+    sim, h = _fit()
+    header = ["size", "N_act(sim)", "N_pre(model)", "paper_N_act", "paper_N_pre",
+              "match", "time_delta_pct_if_wrong"]
+    rows = []
+    for n in PAPER_SIZES:
+        act = sim.actual_optimum(n)
+        pre = h.predict_optimum(n)
+        delta = ""
+        if act != pre:
+            t_act, t_pre = sim.t_str_true(n, act), sim.t_str_true(n, pre)
+            delta = round(100 * abs(t_pre - t_act) / t_act, 3)
+        rows.append([n, act, pre, *PAPER_TABLE4[n], act == pre, delta])
+    return header, rows
+
+
+def table5():
+    """FP32 vs FP64 optimum streams (paper §3.2: same or half)."""
+    f64 = StreamSimulator(precision="fp64")
+    f32 = StreamSimulator(precision="fp32")
+    _, h = _fit()
+    header = ["size", "opt_fp32", "opt_fp64", "relation", "halving_rule_pred"]
+    rows = []
+    for n in PAPER_SIZES:
+        o64, o32 = f64.actual_optimum(n), f32.actual_optimum(n)
+        rel = "same" if o32 == o64 else ("half" if 2 * o32 == o64 else "other")
+        rows.append([n, o32, o64, rel, h.predict_optimum_fp32(n)])
+    return header, rows
+
+
+def fig2():
+    """sum vs SLAE size + the fitted Eq. 4 line (paper Figure 2)."""
+    sim, h = _fit()
+    slope, intercept = h.sum_model.coef[0], h.sum_model.intercept
+    header = ["size", "sum_measured", "sum_model", "paper_eq4_line"]
+    rows = []
+    for n in PAPER_SIZES:
+        s = sum_overlap(sim.measure_components(n))
+        rows.append([
+            n, round(s, 6), round(float(h.predict_sum(n)[0]), 6),
+            round(2.1890017149e-6 * n + 0.1470644998564126, 6),
+        ])
+    rows.append(["fitted_slope", round(float(slope), 12),
+                 "paper_slope", 2.1890017149e-6])
+    rows.append(["fitted_intercept", round(float(intercept), 8),
+                 "paper_intercept", 0.1470644998564126])
+    return header, rows
+
+
+def fig3():
+    """T_overhead vs num_str per size regime (paper Figure 3 curves)."""
+    sim, h = _fit()
+    header = ["size", "num_str", "overhead_measured", "overhead_model"]
+    rows = []
+    for n in (10_000, 100_000, 1_000_000, 10_000_000, 100_000_000):
+        for k in (2, 4, 8, 16, 32):
+            tns = sim.measure_t_non_str(n)
+            ts = sim.measure_t_str(n, k)
+            s = sum_overlap(sim.measure_components(n))
+            ov = overhead_from_measurement(ts, tns, s, k)
+            rows.append([n, k, round(ov, 6),
+                         round(float(h.predict_overhead(n, k)[0]), 6)])
+    return header, rows
+
+
+def fig4():
+    """Actual vs fitted overhead distribution stats (paper Figure 4)."""
+    sim, h = _fit()
+    header = ["regime", "mean_actual", "mean_fitted", "std_actual", "std_fitted"]
+    rows = []
+    for regime, pred in (("small(<=1e6)", lambda n: n <= 1e6),
+                         ("big(>1e6)", lambda n: n > 1e6)):
+        act, fit = [], []
+        for n in PAPER_SIZES:
+            if not pred(n):
+                continue
+            for k in (2, 4, 8, 16, 32):
+                tns = sim.measure_t_non_str(n)
+                ts = sim.measure_t_str(n, k)
+                s = sum_overlap(sim.measure_components(n))
+                act.append(overhead_from_measurement(ts, tns, s, k))
+                fit.append(float(h.predict_overhead(n, k)[0]))
+        rows.append([regime, round(np.mean(act), 4), round(np.mean(fit), 4),
+                     round(np.std(act), 4), round(np.std(fit), 4)])
+    return header, rows
+
+
+def table_a5000():
+    """§3.1: heuristic invariance across RTX 2080 Ti → RTX A5000."""
+    ti = StreamSimulator()
+    a5 = StreamSimulator(gpu=RTX_A5000)
+    header = ["size", "opt_2080ti", "opt_a5000", "invariant"]
+    rows = [[n, ti.actual_optimum(n), a5.actual_optimum(n),
+             ti.actual_optimum(n) == a5.actual_optimum(n)] for n in PAPER_SIZES]
+    return header, rows
+
+
+def speedup():
+    """§3 headline: performance improvement up to 1.30× at 8e7/1e8."""
+    sim = StreamSimulator()
+    header = ["size", "T_non_str", "T_best_str", "speedup", "paper_claim"]
+    rows = []
+    for n in (8_000_000, 40_000_000, 80_000_000, 100_000_000):
+        t0 = sim.t_non_str_true(n)
+        t1 = min(sim.t_str_true(n, k) for k in STREAM_CANDIDATES)
+        rows.append([n, round(t0, 3), round(t1, 3), round(t0 / t1, 3),
+                     "1.30 @ 8e7/1e8"])
+    return header, rows

@@ -1,0 +1,127 @@
+"""§Perf hillclimb driver: re-lower each candidate change and record the
+probe-corrected roofline deltas + memory analysis.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations --iter Q1a
+
+Each iteration = (cell, lower_cell kwargs). Results accumulate in
+results/perf_iters.json; EXPERIMENTS.md §Perf narrates the
+hypothesis → change → before → after → verdict sequence.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+# cell = (arch, shape); kwargs reach lower_cell/probe_cell.
+ITERATIONS = {
+    # Q1: qwen3-4b train_4k — most collective-bound (TP=16 on a 4B model).
+    "Q1a": dict(arch="qwen3-4b", shape="train_4k",
+                kw=dict(strategy="dp_only")),
+    "Q1b": dict(arch="qwen3-4b", shape="train_4k",
+                kw=dict(strategy="dp_only", remat="dots")),
+    "Q1c": dict(arch="qwen3-4b", shape="train_4k",
+                kw=dict(strategy="sp_tp")),
+    "Q1d": dict(arch="qwen3-4b", shape="train_4k",
+                kw=dict(strategy="sp_tp", remat="dots")),
+    "Q1e": dict(arch="qwen3-4b", shape="train_4k",
+                kw=dict(remat="dots")),
+    "Q1f": dict(arch="qwen3-4b", shape="train_4k",
+                kw=dict(microbatches=4)),
+    "Q1g": dict(arch="qwen3-4b", shape="train_4k",
+                kw=dict(microbatches=8, remat="dots")),
+    # I1: internvl2 train — the most extreme collective/compute ratio (12.8x).
+    "I1a": dict(arch="internvl2-2b", shape="train_4k",
+                kw=dict(strategy="sp_tp")),
+    # N1: nemotron-4-340b train_4k — worst memory blow-up.
+    "N1a": dict(arch="nemotron-4-340b", shape="train_4k",
+                kw=dict(microbatches=8)),
+    "N1b": dict(arch="nemotron-4-340b", shape="train_4k",
+                kw=dict(microbatches=8, remat="dots")),
+    "N1c": dict(arch="nemotron-4-340b", shape="train_4k",
+                kw=dict(microbatches=8, strategy="sp_tp")),
+    "N1d": dict(arch="nemotron-4-340b", shape="train_4k",
+                kw=dict(microbatches=32)),
+    "N1e": dict(arch="nemotron-4-340b", shape="train_4k", multi_pod=True,
+                kw=dict(microbatches=16, remat="dots")),
+    # K1: kimi-k2 train_4k — the paper's technique at MoE scale.
+    "K1a": dict(arch="kimi-k2-1t-a32b", shape="train_4k",
+                kw=dict(remat="dots")),
+    "K1b": dict(arch="kimi-k2-1t-a32b", shape="train_4k",
+                kw=dict(microbatches=4)),
+    "K1c": dict(arch="kimi-k2-1t-a32b", shape="train_4k",
+                kw=dict(pctx_overrides=dict(int8_moe_gather=True))),
+    "K1d": dict(arch="kimi-k2-1t-a32b", shape="train_4k",
+                kw=dict(microbatches=4,
+                        pctx_overrides=dict(int8_moe_gather=True))),
+}
+
+OUT = Path("results/perf_iters.json")
+
+
+def run_iteration(name: str, *, probe: bool = True, memory: bool = True):
+    import jax
+
+    from repro.launch.dryrun import lower_cell
+    from repro.roofline.probe import probe_cell
+
+    spec = ITERATIONS[name]
+    multi_pod = spec.get("multi_pod", False)
+    rec = {"iter": name, **{k: v for k, v in spec.items() if k != "kw"},
+           "kwargs": spec["kw"]}
+    t0 = time.time()
+    try:
+        if probe:
+            p = probe_cell(spec["arch"], spec["shape"], multi_pod=multi_pod,
+                           **spec["kw"])
+            rec["probe"] = {k: p[k] for k in ("flops", "bytes", "cbytes")}
+        jax.clear_caches()
+        if memory:
+            record, compiled = lower_cell(
+                spec["arch"], spec["shape"], multi_pod, **spec["kw"]
+            )
+            rec["memory"] = {
+                "argument_bytes": record["roofline"]["argument_bytes"],
+                "temp_bytes": record["roofline"]["temp_bytes"],
+            }
+            rec["raw_roofline"] = record["roofline"]
+            del compiled
+        jax.clear_caches()
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_s"] = round(time.time() - t0, 1)
+
+    results = json.loads(OUT.read_text()) if OUT.exists() else {}
+    results[name] = rec
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(results, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iter", required=True,
+                    choices=list(ITERATIONS) + ["all"])
+    ap.add_argument("--no-memory", action="store_true")
+    args = ap.parse_args()
+    names = list(ITERATIONS) if args.iter == "all" else [args.iter]
+    for name in names:
+        rec = run_iteration(name, memory=not args.no_memory)
+        status = rec["status"]
+        extra = ""
+        if status == "ok" and "probe" in rec:
+            extra = (f" flops={rec['probe']['flops']:.3e}"
+                     f" cbytes={rec['probe']['cbytes']:.3e}")
+        if status == "ok" and "memory" in rec:
+            extra += f" temp={rec['memory']['temp_bytes']/1e9:.1f}GB"
+        print(f"[{name}] {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

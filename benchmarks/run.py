@@ -1,0 +1,67 @@
+"""Benchmark driver: one function per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` style CSV blocks per bench.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run                 # everything
+  PYTHONPATH=src python -m benchmarks.run --only table4   # one bench
+  PYTHONPATH=src python -m benchmarks.run --skip-slow     # skip wall-clock benches
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _emit(name: str, header, rows):
+    print(f"\n### {name}")
+    print(",".join(str(h) for h in header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-slow", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import overlap_autotune, paper_tables
+
+    benches = {
+        "table1": paper_tables.table1,
+        "table2": paper_tables.table2,
+        "table3": paper_tables.table3,
+        "table4": paper_tables.table4,
+        "table5": paper_tables.table5,
+        "fig2": paper_tables.fig2,
+        "fig3": paper_tables.fig3,
+        "fig4": paper_tables.fig4,
+        "a5000": paper_tables.table_a5000,
+        "speedup": paper_tables.speedup,
+        "grad_buckets": overlap_autotune.gradient_buckets,
+        "prefetch_chunks": overlap_autotune.prefetch_chunks,
+    }
+    slow = {}
+    if not args.skip_slow:
+        from benchmarks import arch_steps
+
+        slow = {
+            "measured_chunked_solver": overlap_autotune.measured_chunked_solver,
+            "arch_steps": arch_steps.arch_step_costs,
+        }
+    benches.update(slow)
+
+    selected = {args.only: benches[args.only]} if args.only else benches
+    for name, fn in selected.items():
+        t0 = time.time()
+        header, rows = fn()
+        _emit(name, header, rows)
+        print(f"# {name} took {time.time() - t0:.1f}s")
+    print("\nALL BENCHES DONE")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""The paper's full ML pipeline, end to end — and applied beyond the paper.
+
+  PYTHONPATH=src python examples/autotune_streams.py
+
+1. Measurement campaign on the calibrated RTX 2080 Ti simulator
+   (25 SLAE sizes × {2..32} streams, noisy).
+2. Eq. 4 linear regression for ``sum`` (3:1 shuffled split, R²/MSE).
+3. Eq. 7 curve-fit overhead models (small/big regimes).
+4. Eq. 6 selection vs the Gómez-Luna [6] baseline (Table 1/4 reproduction).
+5. The SAME pipeline on real wall-clock chunked solves on THIS machine.
+6. The generalized tuner picking gradient-bucket counts for the LM framework.
+"""
+
+import numpy as np
+
+from repro.core.autotune.heuristic import (
+    fit_stream_heuristic,
+    gomez_luna_optimum,
+)
+from repro.core.autotune.overlap import tune_gradient_buckets
+from repro.core.streams.measure import measure_dataset
+from repro.core.streams.simulator import PAPER_SIZES, StreamSimulator
+from repro.core.streams.timemodel import sum_overlap
+
+
+def main():
+    print("== 1-3) fit the heuristic on the simulated campaign ==")
+    sim = StreamSimulator(seed=1)
+    heur = fit_stream_heuristic(sim.dataset(reps=2))
+    print(f"sum model: {heur.sum_model.coef[0]:.6e} * N + {heur.sum_model.intercept:.4f}"
+          f"   (paper Eq.4: 2.189002e-06 * N + 0.1471)")
+    for tag in ("sum", "ov_small", "ov_big"):
+        tr, te = heur.metrics[f"{tag}_train"], heur.metrics[f"{tag}_test"]
+        print(f"{tag:9s} R2 train/test = {tr['r2']:.5f} / {te['r2']:.5f}")
+
+    print("\n== 4) predictions vs actual (paper Table 4) ==")
+    hits = 0
+    for n in PAPER_SIZES:
+        pred, act = heur.predict_optimum(n), sim.actual_optimum(n)
+        hits += pred == act
+        s = sum_overlap(sim.components(n))
+        print(f"N={n:>11,}  pred={pred:2d} actual={act:2d} "
+              f"gomez-luna[6]={gomez_luna_optimum(s):6.1f}")
+    print(f"-> {hits}/{len(PAPER_SIZES)} exact (paper: 23/25)")
+
+    print("\n== 5) the same pipeline on REAL wall-clock chunked solves ==")
+    data = measure_dataset((20_000, 100_000, 400_000), (1, 2, 4, 8), reps=2)
+    by_size = {}
+    for r in data.rows:
+        key = r["size"]
+        by_size.setdefault(key, []).append((r["num_str"], r["t_str"]))
+    for n, runs in sorted(by_size.items()):
+        best = min(runs, key=lambda kv: kv[1])
+        print(f"N={n:>8,}: best measured chunks on this host = {best[0]} "
+              f"({best[1]:.2f} ms)")
+
+    print("\n== 6) beyond the paper: gradient-bucket tuning (v5e pod) ==")
+    for params_b, name in ((4e9, "qwen3-4b"), (340e9, "nemotron-340b")):
+        n, margin = tune_gradient_buckets(
+            grad_bytes=params_b * 2 / 256,
+            link_bandwidth_Bps=50e9,
+            backward_compute_s=max(params_b * 4 / 256 / 819e9, 1e-3),
+        )
+        print(f"{name}: {n} gradient buckets (overlap margin {margin*1e3:.2f} ms)")
+
+
+if __name__ == "__main__":
+    main()

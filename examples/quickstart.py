@@ -1,0 +1,60 @@
+"""Quickstart: solve a tridiagonal SLAE with the paper's partition method.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Walks through: (1) the three-stage partition solve (pure JAX), (2) the Pallas
+TPU kernels (validated in interpret mode here), (3) the chunked "virtual
+stream" executor, (4) the ML heuristic predicting the optimum chunk count.
+"""
+
+import numpy as np
+
+from repro.core.tridiag import ensure_x64
+
+ensure_x64()
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.paper_tridiag import CONFIG  # noqa: E402
+from repro.core.autotune.heuristic import fit_stream_heuristic  # noqa: E402
+from repro.core.streams.simulator import StreamSimulator  # noqa: E402
+from repro.core.tridiag import (  # noqa: E402
+    ChunkedPartitionSolver,
+    make_diag_dominant_system,
+    partition_solve,
+    thomas_numpy,
+)
+from repro.kernels.partition_stage3.ops import partition_solve_pallas  # noqa: E402
+
+
+def main():
+    n, m = 100_000, CONFIG.sub_system_size
+    print(f"== Solving a {n}x{n} tridiagonal SLAE (sub-system size m={m}) ==")
+    dl, d, du, b, x_true = make_diag_dominant_system(n, seed=0)
+
+    # 1) pure-JAX partition method (Stage 1 || Stage 2 serial || Stage 3 ||)
+    x = np.asarray(partition_solve(*map(jnp.asarray, (dl, d, du, b)), m=m))
+    err = np.max(np.abs(x - x_true))
+    print(f"partition method      max|x - x_true| = {err:.3e}")
+
+    # 2) Pallas TPU kernels (interpret mode on CPU)
+    xk = np.asarray(partition_solve_pallas(*map(jnp.asarray, (dl, d, du, b)), m=m))
+    print(f"pallas kernels        max|x - ref|    = {np.max(np.abs(xk - thomas_numpy(dl, d, du, b))):.3e}")
+
+    # 3) chunked "virtual streams" (the paper's copy-compute overlap analogue)
+    solver = ChunkedPartitionSolver(m=m, num_chunks=4)
+    xc, timing = solver.solve_timed(dl, d, du, b)
+    print(f"chunked executor      4 chunks, stages {timing.phases} ms")
+
+    # 4) the ML heuristic: fit on the calibrated simulator campaign, predict
+    sim = StreamSimulator(seed=1)
+    heur = fit_stream_heuristic(sim.dataset(reps=2))
+    for size in (10_000, 400_000, 1_000_000, 40_000_000):
+        pred = heur.predict_optimum(size)
+        act = sim.actual_optimum(size)
+        print(f"size {size:>11,}: predicted optimum streams = {pred:2d} "
+              f"(empirical {act:2d})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""repro — a JAX/TPU framework around the paper
+
+  "ML-Based Optimum Number of CUDA Streams for the GPU Implementation of the
+   Tridiagonal Partition Method" (Veneva & Imamura, CS.DC 2025)
+
+Layers (see DESIGN.md):
+  core/      the partition tridiagonal solver, stream time models, simulator,
+             and the ML overlap-granularity autotuner (the paper's heuristic).
+  kernels/   Pallas TPU kernels for the solver's hot spots.
+  models/    LM architectures (dense / MoE / SSM / hybrid / enc-dec / VLM).
+  configs/   the 10 assigned architecture configs + shapes + the paper config.
+  parallel/  DP/TP/EP/SP/FSDP sharding rules and bucketed-overlap collectives.
+  train/     train step, microbatching, remat.
+  serve/     prefill/decode with KV caches.
+  data/      deterministic synthetic data + prefetching pipeline.
+  optim/     AdamW, Adafactor, schedules, error-feedback gradient compression.
+  ckpt/      atomic checkpointing with elastic resharding.
+  ft/        watchdog/preemption fault-tolerance hooks.
+  roofline/  compiled-HLO cost/collective analysis for the dry-run.
+  launch/    production mesh, dry-run driver, train/serve launchers.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+from repro.ckpt.checkpoint import save_checkpoint, restore_checkpoint
+from repro.ckpt.manager import CheckpointManager
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "CheckpointManager"]

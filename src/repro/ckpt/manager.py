@@ -1,0 +1,76 @@
+"""Checkpoint manager: keep-k GC, periodic saves, preemption-triggered save.
+
+Saves run on a background thread (the device→host gather is the only
+synchronous part), so the train loop overlaps checkpoint I/O with compute —
+the same overlap economics the paper models (DESIGN.md §2.3).
+"""
+
+from __future__ import annotations
+
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+
+from repro.ckpt.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 save_every: int = 100, async_save: bool = True):
+        self.dir = Path(directory)
+        self.keep = keep
+        self.save_every = save_every
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------ saving ----
+    def maybe_save(self, step: int, tree: Any, *, force: bool = False) -> bool:
+        if not force and (step == 0 or step % self.save_every):
+            return False
+        self.wait()  # one in-flight save at a time
+        # gather to host synchronously (cheap vs step), write async
+        host_tree = jax.tree.map(lambda a: jax.device_get(a), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.dir, step, host_tree)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._last_error = e
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            if self._last_error:
+                raise self._last_error
+        return True
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error is not None:
+            err, self._last_error = self._last_error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(
+            int(p.name.split("_")[1])
+            for p in self.dir.iterdir()
+            if p.name.startswith("step_")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ----------------------------------------------------------- restore ----
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.dir)
+
+    def restore(self, target_tree: Any, *, shardings: Any = None):
+        return restore_checkpoint(self.dir, target_tree, shardings=shardings)

@@ -1,0 +1,33 @@
+"""Architecture configs (assigned pool + the paper's own workload config).
+
+Importing this package registers every architecture; use
+``repro.configs.base.get_config("<arch-id>")`` or ``--arch <id>`` on the
+launchers.
+"""
+
+from repro.configs.base import ArchConfig, get_config, list_archs, register
+
+# Register all assigned architectures (import side effects).
+from repro.configs import (  # noqa: F401
+    codeqwen15_7b,
+    gemma2_27b,
+    internvl2_2b,
+    kimi_k2_1t_a32b,
+    mamba2_13b,
+    moonshot_v1_16b_a3b,
+    nemotron4_340b,
+    qwen3_4b,
+    whisper_medium,
+    zamba2_7b,
+)
+from repro.configs.shapes import SHAPES, ShapeSpec, input_specs  # noqa: F401
+
+__all__ = [
+    "ArchConfig",
+    "get_config",
+    "list_archs",
+    "register",
+    "SHAPES",
+    "ShapeSpec",
+    "input_specs",
+]

@@ -1,0 +1,130 @@
+"""The assigned input-shape sets and ShapeDtypeStruct stand-ins per cell.
+
+Every (arch × shape) combination is a dry-run cell; ``input_specs`` builds
+weak-type-correct, shardable ShapeDtypeStructs with NO device allocation
+(caches go through ``jax.eval_shape``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# Whisper's encoder length is fixed by the 30 s audio window (frontend stub).
+WHISPER_ENC_FRAMES = 1500
+
+
+def applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped) per the assignment's skip rules."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "long_500k needs sub-quadratic attention; "
+            f"{cfg.arch_id} is full-attention (family={cfg.family})"
+        )
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step function's data arguments."""
+    b, s = shape.global_batch, shape.seq_len
+    act = cfg.dtype
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "frames": _sds((b, WHISPER_ENC_FRAMES, cfg.d_model), act),
+                "tokens": _sds((b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32),
+            }
+        if cfg.family == "vlm":
+            p = cfg.frontend_tokens
+            return {
+                "patches": _sds((b, p, cfg.d_model), act),
+                "tokens": _sds((b, s - p), jnp.int32),
+                "labels": _sds((b, s - p), jnp.int32),
+            }
+        return {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+        }
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {
+                "frames": _sds((b, WHISPER_ENC_FRAMES, cfg.d_model), act),
+                "tokens": _sds((b, s), jnp.int32),
+            }
+        if cfg.family == "vlm":
+            p = cfg.frontend_tokens
+            return {
+                "patches": _sds((b, p, cfg.d_model), act),
+                "tokens": _sds((b, s - p), jnp.int32),
+            }
+        return {"tokens": _sds((b, s), jnp.int32)}
+
+    # decode: one new token against a seq_len-deep cache.
+    from repro.models.registry import build_model
+
+    model = build_model(cfg)
+    caches = jax.eval_shape(lambda: model.make_caches(b, s))
+    specs: Dict[str, Any] = {
+        "token": _sds((b, 1), jnp.int32),
+        "pos": _sds((b,), jnp.int32),
+        "caches": caches,
+    }
+    if cfg.family == "encdec":
+        specs["caches"] = dict(specs["caches"])
+        specs["caches"]["enc_out"] = _sds(
+            (b, WHISPER_ENC_FRAMES, cfg.d_model), act
+        )
+    return specs
+
+
+def synthesize_batch(cfg: ArchConfig, shape: ShapeSpec, seed: int = 0) -> Dict[str, Any]:
+    """Concrete random batch matching input_specs (for smoke tests/examples)."""
+    import numpy as np
+
+    specs = input_specs(cfg, shape)
+    rng = np.random.default_rng(seed)
+    out: Dict[str, Any] = {}
+    for name, spec in specs.items():
+        if name == "caches":
+            out[name] = jax.tree.map(
+                lambda sp: jnp.zeros(sp.shape, sp.dtype), spec
+            )
+        elif name in ("tokens", "token", "labels"):
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=spec.shape), jnp.int32
+            )
+        elif name == "pos":
+            out[name] = jnp.full(spec.shape, shape.seq_len // 2, jnp.int32)
+        else:  # frames / patches
+            out[name] = jnp.asarray(
+                rng.standard_normal(spec.shape) * 0.02, spec.dtype
+            )
+    return out

@@ -1,0 +1,13 @@
+"""Core contribution of the paper, adapted to JAX/TPU (see DESIGN.md):
+
+- ``core.tridiag``  — the parallel partition tridiagonal solver (3 stages)
+  plus the chunked ("virtual stream") executor.
+- ``core.streams``  — the time-complexity models (Eq. 1/2/3/5) and the
+  calibrated GPU performance simulator that stands in for the paper's
+  RTX 2080 Ti measurements on this CPU-only container.
+- ``core.autotune`` — the ML pipeline: linear regression for ``sum`` (Eq. 4),
+  curve-fitted overhead models (Eq. 7), the Eq. 6 selection algorithm, the
+  Gómez-Luna baseline heuristic, and the generalized overlap-granularity
+  tuner used by the LM framework (gradient buckets, prefetch chunks, SSM
+  sequence chunks).
+"""

@@ -1,0 +1,36 @@
+"""The paper's ML pipeline, reusable as a framework feature.
+
+- ``linreg``    — linear regression + shuffled 3:1 train/test split + metrics
+                  (sklearn is not installed here; closed-form lstsq instead).
+- ``curvefit``  — SciPy curve_fit wrapper with a pure-NumPy Levenberg–Marquardt
+                  fallback, plus fit metrics.
+- ``models``    — the preset functional forms: Eq. 4 sum model and the
+                  small/big T_overhead models (the paper's Eq. 7).
+- ``heuristic`` — fit + predict the optimum stream count (Eq. 6 algorithm),
+                  the Gómez-Luna [6] baseline, and the FP32 halving rule.
+- ``overlap``   — the generalized overlap-granularity tuner used by the LM
+                  framework (gradient-collective buckets, prefetch chunks,
+                  SSM sequence chunks) — DESIGN.md §2.3.
+"""
+
+from repro.core.autotune.linreg import LinearModel, train_test_split, r2_score, mse
+from repro.core.autotune.heuristic import (
+    GOMEZ_LUNA_TAU_MS,
+    StreamHeuristic,
+    fit_stream_heuristic,
+    gomez_luna_optimum,
+)
+from repro.core.autotune.overlap import OverlapSpec, tune_overlap_granularity
+
+__all__ = [
+    "LinearModel",
+    "train_test_split",
+    "r2_score",
+    "mse",
+    "StreamHeuristic",
+    "fit_stream_heuristic",
+    "gomez_luna_optimum",
+    "GOMEZ_LUNA_TAU_MS",
+    "OverlapSpec",
+    "tune_overlap_granularity",
+]

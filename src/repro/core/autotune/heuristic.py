@@ -1,0 +1,118 @@
+"""Fit + apply the paper's heuristic for the optimum number of streams.
+
+Pipeline (paper §2.4):
+  1. measure components with NO streams → per-size ``sum`` (Eq. 3);
+  2. linear-regress sum on SLAE size (Eq. 4), shuffled 3:1 split;
+  3. extract T_overhead per (size, num_str) via Eq. 5;
+  4. curve_fit the small/big overhead models (Eq. 7), shuffled 3:1 split;
+  5. predict: optimum = Eq. 6 argmax over powers of two ≤ 32.
+
+Also includes the Gómez-Luna et al. [6] baseline the paper refutes
+(T_overhead = num_str · τ ⇒ n* = sqrt(sum/τ), reproducing Table 1's
+7.8 / 8.6 / 15.8 / 45.0 / 139.8 column exactly).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.autotune import models as M
+from repro.core.autotune.curvefit import curve_fit, fit_metrics
+from repro.core.autotune.linreg import LinearModel, train_test_split
+from repro.core.streams.simulator import StreamDataset
+from repro.core.streams.timemodel import STREAM_CANDIDATES, select_optimum
+
+# τ for the RTX 2080 Ti, measured by the paper (ms per stream creation).
+GOMEZ_LUNA_TAU_MS = 0.004448
+
+
+def gomez_luna_optimum(sum_ms: float, tau_ms: float = GOMEZ_LUNA_TAU_MS) -> float:
+    """[6]: minimize sum/n + n·τ ⇒ n* = sqrt(sum/τ) (continuous, uncapped)."""
+    return math.sqrt(sum_ms / tau_ms)
+
+
+@dataclass
+class StreamHeuristic:
+    """Fitted sum + overhead models and the Eq. 6 selection rule."""
+
+    sum_model: LinearModel
+    popt_small: np.ndarray
+    popt_big: np.ndarray
+    split_size: float = M.SMALL_BIG_SPLIT
+    candidates: Tuple[int, ...] = STREAM_CANDIDATES
+    metrics: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    # -- model evaluation ----------------------------------------------------
+    def predict_sum(self, size) -> np.ndarray:
+        return self.sum_model.predict(np.atleast_1d(np.asarray(size, np.float64)))
+
+    def predict_overhead(self, size, num_str) -> np.ndarray:
+        size = np.atleast_1d(np.asarray(size, dtype=np.float64))
+        num_str = np.broadcast_to(np.asarray(num_str, dtype=np.float64), size.shape)
+        small = M.overhead_small((size, num_str), *self.popt_small)
+        big = M.overhead_big((size, num_str), *self.popt_big)
+        return np.where(size <= self.split_size, small, big)
+
+    # -- the algorithm (paper §2.4 + Eq. 6) -----------------------------------
+    def predict_optimum(self, size: float) -> int:
+        s = float(self.predict_sum(size)[0])
+        overheads = [
+            (k, float(self.predict_overhead(size, k)[0]))
+            for k in self.candidates
+            if k > 1
+        ]
+        return select_optimum(s, overheads, self.candidates)
+
+    def predict_optimum_fp32(self, size: float) -> int:
+        """Paper §3.2 recommendation: halve the FP64 optimum for FP32."""
+        return max(1, self.predict_optimum(size) // 2)
+
+
+def fit_stream_heuristic(
+    data: StreamDataset,
+    *,
+    split_seed: int = 0,
+    test_size: float = 0.25,
+    candidates: Sequence[int] = STREAM_CANDIDATES,
+) -> StreamHeuristic:
+    """Run the paper's full supervised-learning pipeline on a measurement set."""
+    metrics: Dict[str, Dict[str, float]] = {}
+
+    # ---- Eq. 4: sum ~ size (linear regression) ----
+    sizes, sums = data.per_size_sum()
+    x_tr, x_te, y_tr, y_te = train_test_split(
+        sizes, sums, test_size=test_size, seed=split_seed
+    )
+    sum_model = LinearModel.fit(x_tr, y_tr)
+    metrics["sum_train"] = sum_model.metrics(x_tr, y_tr)
+    metrics["sum_test"] = sum_model.metrics(x_te, y_te)
+
+    # ---- Eq. 7: T_overhead ~ (size, num_str), small/big regimes ----
+    def fit_regime(rows, form, p0, tag):
+        size = np.array([r["size"] for r in rows], dtype=np.float64)
+        nstr = np.array([r["num_str"] for r in rows], dtype=np.float64)
+        t_ov = np.array([r["t_overhead"] for r in rows])
+        (s_tr, s_te, n_tr, n_te, o_tr, o_te) = train_test_split(
+            size, nstr, t_ov, test_size=test_size, seed=split_seed
+        )
+        popt = curve_fit(form, (s_tr, n_tr), o_tr, p0)
+        metrics[f"{tag}_train"] = fit_metrics(form, (s_tr, n_tr), o_tr, popt)
+        metrics[f"{tag}_test"] = fit_metrics(form, (s_te, n_te), o_te, popt)
+        return popt
+
+    small_rows = [r for r in data.rows if r["size"] <= M.SMALL_BIG_SPLIT]
+    big_rows = [r for r in data.rows if r["size"] > M.SMALL_BIG_SPLIT]
+    popt_small = fit_regime(small_rows, M.overhead_small, M.OVERHEAD_SMALL_P0, "ov_small")
+    popt_big = fit_regime(big_rows, M.overhead_big, M.OVERHEAD_BIG_P0, "ov_big")
+
+    return StreamHeuristic(
+        sum_model=sum_model,
+        popt_small=popt_small,
+        popt_big=popt_big,
+        candidates=tuple(candidates),
+        metrics=metrics,
+    )

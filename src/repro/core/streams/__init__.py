@@ -1,0 +1,37 @@
+"""Stream time-complexity models (paper Eq. 1/2/3/5/6) and the calibrated
+RTX 2080 Ti performance simulator that stands in for Nsight measurements on
+this CPU-only container (DESIGN.md §2.2)."""
+
+from repro.core.streams.timemodel import (
+    STREAM_CANDIDATES,
+    StageTimes,
+    gain,
+    overhead_from_measurement,
+    select_optimum,
+    sum_overlap,
+    t_non_str,
+    t_str_model,
+)
+from repro.core.streams.simulator import (
+    PAPER_SIZES,
+    GpuSpec,
+    StreamSimulator,
+    RTX_2080_TI,
+    RTX_A5000,
+)
+
+__all__ = [
+    "STREAM_CANDIDATES",
+    "StageTimes",
+    "gain",
+    "overhead_from_measurement",
+    "select_optimum",
+    "sum_overlap",
+    "t_non_str",
+    "t_str_model",
+    "PAPER_SIZES",
+    "GpuSpec",
+    "StreamSimulator",
+    "RTX_2080_TI",
+    "RTX_A5000",
+]

@@ -1,0 +1,56 @@
+"""Real wall-clock measurement path: run the chunked JAX partition solver on
+THIS machine and feed the same ML pipeline the simulator feeds (DESIGN.md §2.2
+— demonstrates the heuristic is hardware-agnostic; on a TPU host the identical
+code measures chunked device execution)."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.streams.simulator import StreamDataset
+from repro.core.streams.timemodel import overhead_from_measurement
+from repro.core.tridiag.chunked import ChunkedPartitionSolver
+from repro.core.tridiag.reference import make_diag_dominant_system
+
+
+def measure_dataset(
+    sizes: Sequence[int],
+    candidates: Sequence[int] = (1, 2, 4, 8, 16, 32),
+    *,
+    m: int = 10,
+    reps: int = 3,
+    dtype=np.float64,
+    seed: int = 0,
+) -> StreamDataset:
+    """Wall-clock measurement campaign over (size × num_chunks).
+
+    The 'sum' of overlappable time on this path is the Stage-1 + Stage-3
+    device time measured at num_chunks=1 (the no-streams profile, exactly how
+    the paper measured its Table-1 columns).
+    """
+    rows: List[Dict] = []
+    for n in sizes:
+        dl, d, du, b, _ = make_diag_dominant_system(n, seed=seed, dtype=dtype)
+        base = ChunkedPartitionSolver(m=m, num_chunks=1)
+        base_timings = [base.solve_timed(dl, d, du, b)[1] for _ in range(reps)]
+        t_non = min(t.t_total_ms for t in base_timings)
+        s = min(t.t_stage1_ms + t.t_stage3_ms for t in base_timings)
+        for k in candidates:
+            if k == 1:
+                continue
+            solver = ChunkedPartitionSolver(m=m, num_chunks=k)
+            for rep in range(reps):
+                _, t = solver.solve_timed(dl, d, du, b)
+                rows.append(
+                    dict(
+                        size=n, num_str=k, rep=rep, sum=s,
+                        t_str=t.t_total_ms, t_non_str=t_non,
+                        t_overhead=overhead_from_measurement(
+                            t.t_total_ms, t_non, s, k
+                        ),
+                        stage_times=None,
+                    )
+                )
+    return StreamDataset(rows)

@@ -1,0 +1,86 @@
+"""The paper's time-complexity models, verbatim as code.
+
+All times in milliseconds, matching the paper's tables.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Sequence, Tuple
+
+# Powers of two up to the Hyper-Q hardware-queue limit (paper §2.1).
+STREAM_CANDIDATES: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+
+
+@dataclass(frozen=True)
+class StageTimes:
+    """Per-operation times of one partition solve (paper Table 1 columns)."""
+
+    t1_h2d: float
+    t1_comp: float
+    t1_d2h: float
+    t2_comp: float
+    t3_h2d: float
+    t3_comp: float
+    t3_d2h: float
+
+
+def t_non_str(st: StageTimes) -> float:
+    """Eq. (1): serial (stream-less) execution time."""
+    return (
+        st.t1_h2d + st.t1_comp + st.t1_d2h
+        + st.t2_comp
+        + st.t3_h2d + st.t3_comp + st.t3_d2h
+    )
+
+
+def sum_overlap(st: StageTimes) -> float:
+    """Eq. (3): the non-dominant GPU operations that take part in the overlap."""
+    return st.t1_comp + st.t1_d2h + st.t3_h2d + st.t3_comp
+
+
+def t_str_model(st: StageTimes, num_str: int, t_overhead: float) -> float:
+    """Eq. (2): lower-bound streamed execution time."""
+    return (
+        st.t1_h2d
+        + sum_overlap(st) / num_str
+        + st.t2_comp
+        + st.t3_d2h
+        + t_overhead
+    )
+
+
+def overhead_from_measurement(
+    t_str: float, t_non_str_: float, sum_: float, num_str: int
+) -> float:
+    """Eq. (5): extract T_overhead from measured streamed/serial times."""
+    return (t_str - t_non_str_) + (num_str - 1) / num_str * sum_
+
+
+def gain(num_str: int, sum_: float, t_overhead: float) -> float:
+    """LHS-vs-RHS margin of Eq. (6): positive ⇒ streams beat serial."""
+    return (num_str - 1) / num_str * sum_ - t_overhead
+
+
+def select_optimum(
+    sum_: float,
+    overheads: Iterable[Tuple[int, float]],
+    candidates: Sequence[int] = STREAM_CANDIDATES,
+) -> int:
+    """The paper's selection algorithm (§2.4, Eq. 6).
+
+    ``overheads`` provides (num_str, T_overhead) pairs for num_str > 1. The
+    optimum is the candidate with the biggest positive Eq.-6 margin; if no
+    margin is positive, streams do not pay for themselves and the optimum is 1.
+    """
+    ov = dict(overheads)
+    best_n, best_gain = 1, 0.0
+    for n in candidates:
+        if n == 1:
+            continue
+        if n not in ov:
+            raise KeyError(f"missing overhead sample/model value for num_str={n}")
+        g = gain(n, sum_, ov[n])
+        if g > best_gain:
+            best_n, best_gain = n, g
+    return best_n

@@ -1,0 +1,59 @@
+"""Tridiagonal solvers: Thomas reference + the paper's parallel partition method.
+
+The partition method (Austin–Berndt–Moulton variant used by the paper) splits an
+N-row tridiagonal system into P = N/m sub-systems ("blocks") of m rows:
+
+  Stage 1 (parallel over blocks, GPU in the paper): eliminate each block's
+          interior to produce one interface equation per block — a reduced
+          tridiagonal system of size P in the block-boundary unknowns
+          s_p = x[(p+1)m - 1].
+  Stage 2 (serial, CPU in the paper): solve the reduced P-size system.
+  Stage 3 (parallel over blocks): back-substitute s into block interiors.
+
+`chunked.py` adds the CUDA-stream analogue: the block dimension is split into
+`num_chunks` slices whose host staging / device compute overlap via JAX async
+dispatch (see DESIGN.md §2.1).
+"""
+
+from repro.core.tridiag.thomas import thomas, thomas_factor, thomas_solve_factored
+from repro.core.tridiag.partition import (
+    PartitionCoeffs,
+    partition_solve,
+    partition_stage1,
+    partition_stage2,
+    partition_stage3,
+)
+from repro.core.tridiag.reference import (
+    make_diag_dominant_system,
+    thomas_numpy,
+    tridiag_matvec,
+    tridiag_to_dense,
+)
+from repro.core.tridiag.chunked import ChunkedPartitionSolver
+
+__all__ = [
+    "thomas",
+    "thomas_factor",
+    "thomas_solve_factored",
+    "PartitionCoeffs",
+    "partition_solve",
+    "partition_stage1",
+    "partition_stage2",
+    "partition_stage3",
+    "make_diag_dominant_system",
+    "thomas_numpy",
+    "tridiag_matvec",
+    "tridiag_to_dense",
+    "ChunkedPartitionSolver",
+]
+
+
+def ensure_x64() -> None:
+    """Enable float64 support (the paper's FP64 precision) process-wide.
+
+    Kept as an explicit opt-in so the LM stack keeps default f32/bf16 type
+    promotion semantics.
+    """
+    import jax
+
+    jax.config.update("jax_enable_x64", True)

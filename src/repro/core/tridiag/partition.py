@@ -1,0 +1,120 @@
+"""The parallel partition method for tridiagonal systems (paper §1, ref [1]).
+
+Formulation (see package docstring): with blocks of m rows, the interface
+unknowns are the *last* unknown of every block, s_p = x[(p+1)m - 1]. Each
+block's (m-1)-row interior couples only to s_{p-1} (through its first row) and
+s_p (through its last interior row), so one Thomas factorization per block with
+three right-hand sides expresses the interior as
+
+    x_interior = y - v * s_{p-1} - w * s_p                       (spikes)
+
+Substituting the neighbouring interiors into each block's *last* row yields one
+equation per block in (s_{p-1}, s_p, s_{p+1}) — the reduced tridiagonal system
+of size P solved in Stage 2.
+
+Stage 1 and Stage 3 are embarrassingly parallel over blocks — on the GPU of the
+paper each CUDA stream takes a slice of blocks; here the block axis is the one
+we shard/chunk (`chunked.py`, `repro.kernels.partition_stage1`).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tridiag.thomas import thomas, thomas_factor, thomas_solve_factored
+
+Array = jax.Array
+
+
+class PartitionCoeffs(NamedTuple):
+    """Stage-1 output: per-block spike solutions + reduced-system rows."""
+
+    y: Array  # (..., P, m-1) particular solution of interior
+    v: Array  # (..., P, m-1) left spike  (coefficient of s_{p-1})
+    w: Array  # (..., P, m-1) right spike (coefficient of s_p)
+    red_dl: Array  # (..., P) reduced sub-diagonal
+    red_d: Array  # (..., P) reduced diagonal
+    red_du: Array  # (..., P) reduced super-diagonal
+    red_b: Array  # (..., P) reduced RHS
+
+
+def _blockify(a: Array, m: int) -> Array:
+    *lead, n = a.shape
+    assert n % m == 0, f"system size {n} not divisible by sub-system size {m}"
+    return a.reshape(*lead, n // m, m)
+
+
+def partition_stage1(
+    dl: Array, d: Array, du: Array, b: Array, m: int
+) -> PartitionCoeffs:
+    """Parallel intra-block elimination (GPU Stage 1 in the paper)."""
+    if m < 2:
+        raise ValueError("sub-system size m must be >= 2")
+    dlb, db, dub, bb = (_blockify(a, m) for a in (dl, d, du, b))
+    # Interior rows are local indices 0..m-2 of each block.
+    int_dl = dlb[..., :, : m - 1].at[..., :, 0].set(0.0)
+    int_d = db[..., :, : m - 1]
+    int_du = dub[..., :, : m - 1].at[..., :, m - 2].set(0.0)
+
+    factors = thomas_factor(int_dl, int_d, int_du)
+    # Three RHS: particular (d), left spike (a_first * e_0), right spike
+    # (c_last_interior * e_{m-2}).
+    rhs = jnp.stack(
+        [
+            bb[..., :, : m - 1],
+            jnp.zeros_like(int_d).at[..., :, 0].set(dlb[..., :, 0]),
+            jnp.zeros_like(int_d).at[..., :, m - 2].set(dub[..., :, m - 2]),
+        ],
+        axis=-1,
+    )  # (..., P, m-1, 3)
+    sol = thomas_solve_factored(factors, rhs)
+    y, v, w = sol[..., 0], sol[..., 1], sol[..., 2]
+
+    # Last row of each block: aL x[last_interior] + bL s_p + cL x_first_next = dL
+    aL = dlb[..., :, m - 1]
+    bL = db[..., :, m - 1]
+    cL = dub[..., :, m - 1]  # 0 for the final block by convention
+    dL = bb[..., :, m - 1]
+
+    y_last, v_last, w_last = y[..., :, m - 2], v[..., :, m - 2], w[..., :, m - 2]
+    # Next block's first interior row spikes (zero-padded past the last block).
+    pad = lambda a: jnp.concatenate(
+        [a[..., 1:, 0], jnp.zeros_like(a[..., :1, 0])], axis=-1
+    )
+    y_nf, v_nf, w_nf = pad(y), pad(v), pad(w)
+
+    red_dl = -aL * v_last
+    red_d = bL - aL * w_last - cL * v_nf
+    red_du = -cL * w_nf
+    red_b = dL - aL * y_last - cL * y_nf
+    return PartitionCoeffs(y, v, w, red_dl, red_d, red_du, red_b)
+
+
+def partition_stage2(coeffs: PartitionCoeffs) -> Array:
+    """Serial reduced solve of size P (CPU Stage 2 in the paper)."""
+    return thomas(coeffs.red_dl, coeffs.red_d, coeffs.red_du, coeffs.red_b)
+
+
+def partition_stage3(coeffs: PartitionCoeffs, s: Array) -> Array:
+    """Parallel back-substitution: x_interior = y - v s_{p-1} - w s_p."""
+    s_left = jnp.concatenate(
+        [jnp.zeros_like(s[..., :1]), s[..., :-1]], axis=-1
+    )
+    x_int = (
+        coeffs.y
+        - coeffs.v * s_left[..., :, None]
+        - coeffs.w * s[..., :, None]
+    )
+    x_blocks = jnp.concatenate([x_int, s[..., :, None]], axis=-1)
+    *lead, p, m = x_blocks.shape
+    return x_blocks.reshape(*lead, p * m)
+
+
+def partition_solve(dl: Array, d: Array, du: Array, b: Array, m: int = 10) -> Array:
+    """Full three-stage partition solve. Batched over leading dims of inputs."""
+    coeffs = partition_stage1(dl, d, du, b, m)
+    s = partition_stage2(coeffs)
+    return partition_stage3(coeffs, s)

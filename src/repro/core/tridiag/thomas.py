@@ -1,0 +1,112 @@
+"""Thomas algorithm (serial tridiagonal solve) as a `jax.lax.scan`.
+
+Acts as (a) the Stage-2 reduced-system solver, (b) the per-block interior
+solver in Stage 1 (with multiple right-hand sides sharing one factorization),
+and (c) the correctness oracle for the partition method and Pallas kernels.
+
+Conventions
+-----------
+A system of size n is given by three diagonals and a right-hand side:
+
+  dl[i] * x[i-1] + d[i] * x[i] + du[i] * x[i+1] = b[i],   i = 0..n-1
+
+with dl[0] and du[n-1] ignored (treated as 0). All functions support leading
+batch dimensions on every operand and multiple right-hand sides via a trailing
+axis on ``b`` of shape (..., n, k).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _forward_factor(dl: Array, d: Array, du: Array) -> Tuple[Array, Array]:
+    """LU-style forward sweep. Returns (w, du) where w[i] = dl[i]/dhat[i-1]
+    and dhat is the modified diagonal; both are needed to transform RHS."""
+
+    def step(carry, xs):
+        dhat_prev = carry
+        dl_i, d_i, du_prev = xs
+        w_i = dl_i / dhat_prev
+        dhat_i = d_i - w_i * du_prev
+        return dhat_i, (w_i, dhat_i)
+
+    # i = 0 row is the carry seed.
+    dhat0 = d[..., 0]
+    xs = (
+        jnp.moveaxis(dl[..., 1:], -1, 0),
+        jnp.moveaxis(d[..., 1:], -1, 0),
+        jnp.moveaxis(du[..., :-1], -1, 0),
+    )
+    _, (w_tail, dhat_tail) = jax.lax.scan(step, dhat0, xs)
+    w = jnp.concatenate(
+        [jnp.zeros_like(dhat0)[None], w_tail], axis=0
+    )  # (n, ...)
+    dhat = jnp.concatenate([dhat0[None], dhat_tail], axis=0)
+    return jnp.moveaxis(w, 0, -1), jnp.moveaxis(dhat, 0, -1)
+
+
+def thomas_factor(dl: Array, d: Array, du: Array) -> Tuple[Array, Array, Array]:
+    """Factor the tridiagonal matrix once: returns (w, dhat, du).
+
+    Reusable across right-hand sides — Stage 1 of the partition method solves
+    three RHS (y, v, w spikes) against one interior matrix.
+    """
+    w, dhat = _forward_factor(dl, d, du)
+    return w, dhat, du
+
+
+def thomas_solve_factored(
+    factors: Tuple[Array, Array, Array], b: Array
+) -> Array:
+    """Solve given precomputed factors. ``b``: (..., n) or (..., n, k)."""
+    w, dhat, du = factors
+    vec = b.ndim == w.ndim  # single RHS
+    if vec:
+        b = b[..., None]
+    n = b.shape[-2]
+
+    # Forward substitution: bhat[i] = b[i] - w[i] * bhat[i-1]
+    def fwd(carry, xs):
+        w_i, b_i = xs
+        bhat_i = b_i - w_i[..., None] * carry
+        return bhat_i, bhat_i
+
+    b_t = jnp.moveaxis(b, -2, 0)  # (n, ..., k)
+    w_t = jnp.moveaxis(w, -1, 0)  # (n, ...)
+    bhat0 = b_t[0]
+    _, bhat_tail = jax.lax.scan(fwd, bhat0, (w_t[1:], b_t[1:]))
+    bhat = jnp.concatenate([bhat0[None], bhat_tail], axis=0)
+
+    # Backward substitution: x[i] = (bhat[i] - du[i] * x[i+1]) / dhat[i]
+    dhat_t = jnp.moveaxis(dhat, -1, 0)
+    du_t = jnp.moveaxis(du, -1, 0)
+    xn = bhat[n - 1] / dhat_t[n - 1][..., None]
+
+    def bwd(carry, xs):
+        bhat_i, dhat_i, du_i = xs
+        x_i = (bhat_i - du_i[..., None] * carry) / dhat_i[..., None]
+        return x_i, x_i
+
+    _, x_head = jax.lax.scan(
+        bwd,
+        xn,
+        (bhat[: n - 1], dhat_t[: n - 1], du_t[: n - 1]),
+        reverse=True,
+    )
+    x = jnp.concatenate([x_head, xn[None]], axis=0)
+    x = jnp.moveaxis(x, 0, -2)
+    if vec:
+        x = x[..., 0]
+    return x
+
+
+def thomas(dl: Array, d: Array, du: Array, b: Array) -> Array:
+    """One-shot Thomas solve. Supports batch dims and multi-RHS ``b``."""
+    dl, d, du = jnp.broadcast_arrays(dl, d, du)
+    return thomas_solve_factored(thomas_factor(dl, d, du), b)

@@ -1,0 +1,4 @@
+from repro.data.synthetic import SyntheticLMDataset
+from repro.data.pipeline import PrefetchPipeline
+
+__all__ = ["SyntheticLMDataset", "PrefetchPipeline"]

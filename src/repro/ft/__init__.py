@@ -1,0 +1,4 @@
+from repro.ft.watchdog import StepWatchdog
+from repro.ft.preemption import PreemptionHandler
+
+__all__ = ["StepWatchdog", "PreemptionHandler"]

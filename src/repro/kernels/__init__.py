@@ -1,0 +1,29 @@
+"""Pallas TPU kernels for the partition method's GPU hot spots.
+
+Four kernels (each with ``ops.py`` jit wrapper and ``ref.py`` pure-jnp oracle):
+
+- ``thomas``           — batched independent Thomas solves (B systems × n rows).
+- ``partition_stage1`` — per-block interior elimination producing the three
+                         spike solutions (y, v, w); the paper's Stage-1 kernel.
+- ``partition_stage3`` — per-block back-substitution; the paper's Stage-3 kernel.
+- ``tridiag_matvec``   — residual matvec r = A·x (verification/benchmark util).
+
+TPU adaptation notes (DESIGN.md §2): the solve dimension is laid out on
+*sublanes* (first tile axis) and the batch/block dimension on *lanes* (second
+tile axis, multiples of 128), so each recurrence step is a full-width VPU
+operation. The grid over the batch/block axis gives Pallas' double-buffered
+HBM→VMEM pipeline — the TPU analogue of the CUDA-stream copy/compute overlap
+that the paper tunes.
+"""
+
+from repro.kernels.thomas.ops import thomas_pallas
+from repro.kernels.partition_stage1.ops import partition_stage1_pallas
+from repro.kernels.partition_stage3.ops import partition_stage3_pallas
+from repro.kernels.tridiag_matvec.ops import tridiag_matvec_pallas
+
+__all__ = [
+    "thomas_pallas",
+    "partition_stage1_pallas",
+    "partition_stage3_pallas",
+    "tridiag_matvec_pallas",
+]

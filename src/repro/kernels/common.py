@@ -1,0 +1,64 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (`pl.pallas_call` + explicit `BlockSpec` VMEM tiling).
+On this CPU-only container they run with ``interpret=True``, which executes
+the kernel body in Python and validates semantics; on a real TPU the same
+code compiles to Mosaic, and the grid dimension provides the automatic
+HBM→VMEM double-buffered pipeline that is our analogue of the paper's
+copy-compute stream overlap (DESIGN.md §2.1).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+# Lane width of the TPU vector unit; the trailing tile dim should be a
+# multiple of this for full VREG utilization.
+LANES = 128
+SUBLANES = 8
+
+
+def interpret_default() -> bool:
+    """Interpret mode unless running on a real TPU (overridable via env)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pad_axis_to(x, size: int, axis: int, value=0.0):
+    """Pad ``axis`` of x up to ``size`` with ``value``."""
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    import jax.numpy as jnp
+
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def assert_allclose_by_dtype(actual, desired, dtype) -> None:
+    """Tolerance ladder used by every kernel test (oracle comparisons)."""
+    tol = {
+        "float64": 1e-12,
+        "float32": 1e-5,
+        "bfloat16": 2e-2,
+    }[np.dtype(dtype).name]
+    np.testing.assert_allclose(
+        np.asarray(actual, np.float64),
+        np.asarray(desired, np.float64),
+        rtol=tol,
+        atol=tol * 10,
+    )

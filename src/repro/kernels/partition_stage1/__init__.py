@@ -1,0 +1,3 @@
+from repro.kernels.partition_stage1.ops import partition_stage1_pallas
+
+__all__ = ["partition_stage1_pallas"]

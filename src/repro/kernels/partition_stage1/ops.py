@@ -1,0 +1,59 @@
+"""Jitted wrapper: Stage-1 Pallas kernel + reduced-row assembly."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tridiag.partition import PartitionCoeffs
+from repro.kernels import common
+from repro.kernels.partition_stage1.stage1 import stage1_tiled
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block_p", "interpret"))
+def _stage1_impl(dl, d, du, b, *, m: int, block_p: int, interpret: bool):
+    n = d.shape[-1]
+    p = n // m
+    pp = common.round_up(p, block_p)
+    blk = lambda a, fill: common.pad_axis_to(
+        a.reshape(p, m).T, pp, axis=1, value=fill
+    )  # (m, pp)
+    dlT, dT, duT, bT = blk(dl, 0.0), blk(d, 1.0), blk(du, 0.0), blk(b, 0.0)
+    yT, vT, wT = stage1_tiled(
+        dlT, dT, duT, bT, m=m, block_p=block_p, interpret=interpret
+    )
+    y, v, w = (a[:, :p].T for a in (yT, vT, wT))  # (p, m-1)
+
+    # ---- reduced interface rows (cheap; same algebra as partition.py) ----
+    dlb, db, dub, bb = (a.reshape(p, m) for a in (dl, d, du, b))
+    aL, bL, cL, dL = dlb[:, m - 1], db[:, m - 1], dub[:, m - 1], bb[:, m - 1]
+    pad = lambda a: jnp.concatenate([a[1:, 0], jnp.zeros_like(a[:1, 0])])
+    y_nf, v_nf, w_nf = pad(y), pad(v), pad(w)
+    red_dl = -aL * v[:, m - 2]
+    red_d = bL - aL * w[:, m - 2] - cL * v_nf
+    red_du = -cL * w_nf
+    red_b = dL - aL * y[:, m - 2] - cL * y_nf
+    return PartitionCoeffs(y, v, w, red_dl, red_d, red_du, red_b)
+
+
+def partition_stage1_pallas(
+    dl: jax.Array,
+    d: jax.Array,
+    du: jax.Array,
+    b: jax.Array,
+    *,
+    m: int = 10,
+    block_p: int = 512,
+    interpret: bool | None = None,
+) -> PartitionCoeffs:
+    """Stage 1 of the partition method for a single (N,) system via Pallas."""
+    if interpret is None:
+        interpret = common.interpret_default()
+    dl, d, du, b = (jnp.asarray(a) for a in (dl, d, du, b))
+    n = d.shape[-1]
+    if n % m:
+        raise ValueError(f"system size {n} not divisible by m={m}")
+    block_p = min(block_p, common.round_up(n // m, common.LANES))
+    return _stage1_impl(dl, d, du, b, m=m, block_p=block_p, interpret=interpret)

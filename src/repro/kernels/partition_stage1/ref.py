@@ -1,0 +1,7 @@
+"""Oracle for the Stage-1 kernel: the pure-jnp partition_stage1."""
+
+from repro.core.tridiag.partition import PartitionCoeffs, partition_stage1
+
+
+def stage1_ref(dl, d, du, b, m: int) -> PartitionCoeffs:
+    return partition_stage1(dl, d, du, b, m)

@@ -1,0 +1,6 @@
+from repro.kernels.partition_stage3.ops import (
+    partition_solve_pallas,
+    partition_stage3_pallas,
+)
+
+__all__ = ["partition_stage3_pallas", "partition_solve_pallas"]

@@ -1,0 +1,63 @@
+"""Jitted wrapper for the Stage-3 Pallas kernel + full pallas solve driver."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tridiag.partition import PartitionCoeffs
+from repro.core.tridiag.thomas import thomas
+from repro.kernels import common
+from repro.kernels.partition_stage3.stage3 import stage3_tiled
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def _stage3_impl(y, v, w, s, *, block_p: int, interpret: bool):
+    p, mi = y.shape
+    m = mi + 1
+    pp = common.round_up(p, block_p)
+    padT = lambda a: common.pad_axis_to(a.T, pp, axis=1)
+    s_left = jnp.concatenate([jnp.zeros_like(s[:1]), s[:-1]])
+    xT = stage3_tiled(
+        padT(y), padT(v), padT(w),
+        common.pad_axis_to(s[None, :], pp, axis=1),
+        common.pad_axis_to(s_left[None, :], pp, axis=1),
+        m=m, block_p=block_p, interpret=interpret,
+    )
+    return xT[:, :p].T.reshape(p * m)
+
+
+def partition_stage3_pallas(
+    coeffs: PartitionCoeffs,
+    s: jax.Array,
+    *,
+    block_p: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Back-substitute interface values into block interiors via Pallas."""
+    if interpret is None:
+        interpret = common.interpret_default()
+    p = s.shape[-1]
+    block_p = min(block_p, common.round_up(p, common.LANES))
+    return _stage3_impl(
+        coeffs.y, coeffs.v, coeffs.w, s, block_p=block_p, interpret=interpret
+    )
+
+
+def partition_solve_pallas(
+    dl: jax.Array,
+    d: jax.Array,
+    du: jax.Array,
+    b: jax.Array,
+    *,
+    m: int = 10,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Full partition solve with Pallas Stage-1/Stage-3 and jnp Stage 2."""
+    from repro.kernels.partition_stage1.ops import partition_stage1_pallas
+
+    coeffs = partition_stage1_pallas(dl, d, du, b, m=m, interpret=interpret)
+    s = thomas(coeffs.red_dl, coeffs.red_d, coeffs.red_du, coeffs.red_b)
+    return partition_stage3_pallas(coeffs, s, interpret=interpret)

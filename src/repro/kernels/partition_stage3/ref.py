@@ -1,0 +1,7 @@
+"""Oracle for the Stage-3 kernel: the pure-jnp partition_stage3."""
+
+from repro.core.tridiag.partition import partition_stage3
+
+
+def stage3_ref(coeffs, s):
+    return partition_stage3(coeffs, s)

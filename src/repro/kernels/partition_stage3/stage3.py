@@ -1,0 +1,48 @@
+"""Partition-method Stage 3 (back-substitution) as a Pallas TPU kernel.
+
+x_interior = y − v·s_{p−1} − w·s_p per block, plus the interface row itself.
+Pure fused-multiply-add over (m−1, block_p) tiles with two broadcast rows —
+memory-bound, exactly the operation the paper hides behind the Stage-3 D2H
+transfer via streams.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _stage3_kernel(y_ref, v_ref, w_ref, s_ref, sl_ref, x_ref, *, m: int):
+    s = s_ref[0:1, :]
+    sl = sl_ref[0:1, :]
+    x_ref[0 : m - 1, :] = y_ref[...] - v_ref[...] * sl - w_ref[...] * s
+    x_ref[m - 1 : m, :] = s
+
+
+def stage3_tiled(
+    yT: jax.Array,
+    vT: jax.Array,
+    wT: jax.Array,
+    s: jax.Array,
+    s_left: jax.Array,
+    *,
+    m: int,
+    block_p: int,
+    interpret: bool,
+) -> jax.Array:
+    """(m-1, P) spikes + (1, P) interface rows -> (m, P) solution tile."""
+    p = s.shape[-1]
+    grid = (p // block_p,)
+    spike_spec = pl.BlockSpec((m - 1, block_p), lambda i: (0, i))
+    row_spec = pl.BlockSpec((1, block_p), lambda i: (0, i))
+    out_spec = pl.BlockSpec((m, block_p), lambda i: (0, i))
+    return pl.pallas_call(
+        functools.partial(_stage3_kernel, m=m),
+        grid=grid,
+        in_specs=[spike_spec] * 3 + [row_spec] * 2,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((m, p), yT.dtype),
+        interpret=interpret,
+    )(yT, vT, wT, s, s_left)

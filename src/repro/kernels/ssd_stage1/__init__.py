@@ -1,0 +1,3 @@
+from repro.kernels.ssd_stage1.ops import ssd_scan_pallas
+
+__all__ = ["ssd_scan_pallas"]

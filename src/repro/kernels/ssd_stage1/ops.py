@@ -1,0 +1,86 @@
+"""Jitted wrapper: chunked SSD via the Pallas Stage-1 kernel + jnp Stage 2/3.
+
+``ssd_scan_pallas`` is a drop-in for ``repro.models.layers.ssm.ssd_scan``
+(same signature/semantics) with the quadratic intra-chunk work in the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.ssd_stage1.ssd1 import ssd1_tiled
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_pallas_impl(x, dt, a, b_in, c_in, h0, *, chunk: int, interpret: bool):
+    # pin fp32 throughout (callers may run under jax_enable_x64)
+    x, dt, a, b_in, c_in, h0 = (
+        t.astype(jnp.float32) for t in (x, dt, a, b_in, c_in, h0)
+    )
+    bsz, s, nh, p = x.shape
+    n = b_in.shape[-1]
+    nc = s // chunk
+    g = bsz * nc
+
+    u = (x.astype(jnp.float32) * dt[..., None]).reshape(g, chunk, nh, p)
+    dac = (dt * a).reshape(g, chunk, nh)
+    bc = b_in.astype(jnp.float32).reshape(g, chunk, n)
+    cc = c_in.astype(jnp.float32).reshape(g, chunk, n)
+
+    y_diag, s_chunk = ssd1_tiled(u, dac, bc, cc, interpret=interpret)
+    y_diag = y_diag.reshape(bsz, nc, chunk, nh, p)
+    s_chunk = s_chunk.reshape(bsz, nc, nh, p, n)
+
+    # ---- Stage 2: interface recurrence over chunks (small, sequential) ----
+    cum = jnp.cumsum(dac.reshape(bsz, nc, chunk, nh), axis=2)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B, NC, H]
+
+    def step(h, inp):
+        dec, s_c = inp
+        return h * dec[..., None, None] + s_c, h
+
+    final_state, h_prev = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_chunk, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # [B, NC, H, P, N]
+
+    # ---- Stage 3: broadcast incoming states into chunk outputs ----
+    state_decay = jnp.exp(cum)  # [B, NC, Q, H]
+    cc4 = c_in.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc4, h_prev, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, nh, p)
+    return y, final_state
+
+
+def ssd_scan_pallas(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_in: jax.Array,
+    c_in: jax.Array,
+    *,
+    chunk: int,
+    h0: Optional[jax.Array] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Drop-in for ssm.ssd_scan with the Stage-1 hot loop in Pallas."""
+    if interpret is None:
+        interpret = common.interpret_default()
+    bsz, s, nh, p = x.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk} != 0")
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, p, n), jnp.float32)
+    return _ssd_pallas_impl(
+        x, dt, a, b_in, c_in, h0.astype(jnp.float32),
+        chunk=chunk, interpret=interpret,
+    )

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the SSD Stage-1 kernel (mirrors ssm.ssd_scan's
+Stage-1a/1b einsums on chunked views)."""
+
+import jax.numpy as jnp
+
+from repro.models.layers.ssm import _segsum_decay
+
+
+def ssd_stage1_ref(u, dac, b, c):
+    """u: [G, Q, H, P] (dt-scaled inputs); dac: [G, Q, H]; b/c: [G, Q, N].
+    Returns (y_diag [G,Q,H,P], states [G,H,P,N])."""
+    u32 = u.astype(jnp.float32)
+    dac32 = dac.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    cum = jnp.cumsum(dac32, axis=1)
+    ldec = _segsum_decay(dac32)  # [G, H, Q, Q]
+    scores = jnp.einsum("gqn,gkn->gqk", c32, b32)
+    y = jnp.einsum("gqk,ghqk,gkhp->gqhp", scores, ldec, u32)
+    decay_end = jnp.exp(cum[:, -1:, :] - cum)  # [G, Q, H]
+    s = jnp.einsum("gkn,gkh,gkhp->ghpn", b32, decay_end, u32)
+    return y, s

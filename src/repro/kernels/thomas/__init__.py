@@ -1,0 +1,3 @@
+from repro.kernels.thomas.ops import thomas_pallas
+
+__all__ = ["thomas_pallas"]

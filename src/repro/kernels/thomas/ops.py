@@ -1,0 +1,46 @@
+"""Jitted public wrapper for the batched Thomas Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.thomas.thomas import thomas_tiled
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _thomas_impl(dl, d, du, b, *, block_b: int, interpret: bool):
+    bsz, n = d.shape
+    bp = common.round_up(bsz, block_b)
+    # Pad batch with identity systems (d=1) so padded lanes never divide by 0.
+    dlT = common.pad_axis_to(dl.T, bp, axis=1)
+    dT = common.pad_axis_to(d.T, bp, axis=1, value=1.0)
+    duT = common.pad_axis_to(du.T, bp, axis=1)
+    bT = common.pad_axis_to(b.T, bp, axis=1)
+    xT = thomas_tiled(dlT, dT, duT, bT, block_b=block_b, interpret=interpret)
+    return xT[:, :bsz].T
+
+
+def thomas_pallas(
+    dl: jax.Array,
+    d: jax.Array,
+    du: jax.Array,
+    b: jax.Array,
+    *,
+    block_b: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Solve B independent tridiagonal systems given as (B, n) diagonals."""
+    if interpret is None:
+        interpret = common.interpret_default()
+    dl, d, du, b = (jnp.asarray(a) for a in (dl, d, du, b))
+    if d.ndim == 1:
+        return thomas_pallas(
+            dl[None], d[None], du[None], b[None],
+            block_b=block_b, interpret=interpret,
+        )[0]
+    block_b = min(block_b, common.round_up(d.shape[0], common.LANES))
+    return _thomas_impl(dl, d, du, b, block_b=block_b, interpret=interpret)

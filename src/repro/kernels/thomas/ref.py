@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the batched Thomas kernel."""
+
+import jax
+
+from repro.core.tridiag.thomas import thomas
+
+
+def thomas_ref(dl: jax.Array, d: jax.Array, du: jax.Array, b: jax.Array) -> jax.Array:
+    """(B, n) batched solve via the scan-based reference solver."""
+    return thomas(dl, d, du, b)

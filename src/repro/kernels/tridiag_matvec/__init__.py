@@ -1,0 +1,3 @@
+from repro.kernels.tridiag_matvec.ops import tridiag_matvec_pallas
+
+__all__ = ["tridiag_matvec_pallas"]

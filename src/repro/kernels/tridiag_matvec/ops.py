@@ -1,0 +1,45 @@
+"""Jitted wrapper for the tridiagonal matvec Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.tridiag_matvec.matvec import matvec_tiled
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def _matvec_impl(dl, d, du, x, *, block_r: int, interpret: bool):
+    n = d.shape[-1]
+    xl = jnp.concatenate([jnp.zeros_like(x[:1]), x[:-1]])
+    xr = jnp.concatenate([x[1:], jnp.zeros_like(x[:1])])
+    rows = common.cdiv(n, common.LANES)
+    rows_p = common.round_up(rows, block_r)
+    shape2 = (rows_p, common.LANES)
+    to2 = lambda a: common.pad_axis_to(a, rows_p * common.LANES, axis=0).reshape(shape2)
+    r2 = matvec_tiled(
+        to2(dl), to2(d), to2(du), to2(xl), to2(x), to2(xr),
+        block_r=block_r, interpret=interpret,
+    )
+    return r2.reshape(-1)[:n]
+
+
+def tridiag_matvec_pallas(
+    dl: jax.Array,
+    d: jax.Array,
+    du: jax.Array,
+    x: jax.Array,
+    *,
+    block_r: int = 64,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """r = A·x for a single (N,) tridiagonal system via Pallas."""
+    if interpret is None:
+        interpret = common.interpret_default()
+    dl, d, du, x = (jnp.asarray(a) for a in (dl, d, du, x))
+    n = d.shape[-1]
+    block_r = min(block_r, common.round_up(common.cdiv(n, common.LANES), 8))
+    return _matvec_impl(dl, d, du, x, block_r=block_r, interpret=interpret)

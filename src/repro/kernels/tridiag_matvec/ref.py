@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the tridiagonal matvec kernel."""
+
+import jax.numpy as jnp
+
+
+def tridiag_matvec_ref(dl, d, du, x):
+    r = d * x
+    r = r.at[..., 1:].add(dl[..., 1:] * x[..., :-1])
+    r = r.at[..., :-1].add(du[..., :-1] * x[..., 1:])
+    return r

@@ -1,0 +1,313 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+# ^ MUST run before any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  jit(step).lower(**ShapeDtypeStructs) → .compile() → memory/cost analysis
+  → three-term roofline (repro.roofline) → JSON record.
+
+No arrays are ever allocated: params/optimizer state come from
+jax.eval_shape, inputs from configs.shapes.input_specs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.json        # incremental: completed cells skipped
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, list_archs
+from repro.configs.shapes import SHAPES, applicable, input_specs
+from repro.launch.mesh import make_ctx, make_production_mesh
+from repro.models.registry import build_model
+from repro.optim import adafactor, adamw
+from repro.parallel.sharding import batch_spec, param_specs
+from repro.roofline.analysis import analyze_compiled, model_flops_for
+from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.train.step import init_train_state, make_train_step
+
+# Optimizer choice: Adafactor above this size so optimizer state doesn't
+# triple the per-chip footprint (DESIGN.md §3 / EXPERIMENTS.md §Dry-run).
+ADAFACTOR_THRESHOLD = 100e9
+
+
+def pick_optimizer(cfg):
+    if cfg.param_count() > ADAFACTOR_THRESHOLD:
+        return adafactor(1e-4), "adafactor"
+    return adamw(3e-4), "adamw"
+
+
+def _shardings_for(tree, spec_fn, mesh):
+    from jax.sharding import NamedSharding
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_fn(path, leaf)), tree
+    )
+
+
+def _param_shardings(params_shape, cfg, pctx):
+    from jax.sharding import NamedSharding
+
+    specs = param_specs(params_shape, cfg, pctx)
+    return jax.tree.map(lambda s: NamedSharding(pctx.mesh, s), specs)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               remat: str = "full", microbatches: int = 1,
+               cfg_override=None, unroll: bool = False,
+               strategy: str = "tp", pctx_overrides=None):
+    """Lower + compile one cell; returns (record, compiled)."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}, None
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    seq_shard = shape.name == "long_500k"
+    pctx = make_ctx(mesh, seq_shard=seq_shard,
+                    remat=remat if shape.kind == "train" else "none",
+                    strategy=strategy)
+    if unroll:
+        pctx = dataclasses.replace(pctx, unroll_layers=True, unroll_attn=True)
+    if pctx_overrides:
+        pctx = dataclasses.replace(pctx, **pctx_overrides)
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    max_dec_len = shape.seq_len if cfg.family == "encdec" else 4096
+
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "status": "ok",
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+
+    t0 = time.time()
+    params_shape = jax.eval_shape(
+        functools.partial(model.init, max_dec_len=max_dec_len),
+        jax.random.PRNGKey(0),
+    )
+    p_sh = _param_shardings(params_shape, cfg, pctx)
+    bspec = batch_spec(cfg, pctx, seq_sharded=seq_shard)
+
+    if shape.kind == "train":
+        optimizer, opt_name = pick_optimizer(cfg)
+        record["optimizer"] = opt_name
+        state_shape = jax.eval_shape(
+            functools.partial(
+                init_train_state, model, cfg, optimizer,
+                max_dec_len=max_dec_len,
+            ),
+            jax.random.PRNGKey(0),
+        )
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        # optimizer state shards like its parameter (name rules re-applied)
+        opt_sh = _opt_state_shardings(state_shape.opt_state, cfg, pctx)
+        state_sh = type(state_shape)(
+            params=p_sh,
+            opt_state=opt_sh,
+            step=NamedSharding(mesh, P()),
+            ef_state=None,
+        )
+        batch_sh = _shardings_for(specs, bspec, mesh)
+        step_fn = make_train_step(
+            model, cfg, pctx, optimizer, microbatches=microbatches
+        )
+        jitted = jax.jit(
+            step_fn, in_shardings=(state_sh, batch_sh), donate_argnums=(0,)
+        )
+        lowered = jitted.lower(state_shape, specs)
+    elif shape.kind == "prefill":
+        batch_sh = _shardings_for(specs, bspec, mesh)
+        step_fn = make_prefill_step(model, cfg, pctx, max_len=shape.seq_len)
+        jitted = jax.jit(step_fn, in_shardings=(p_sh, batch_sh))
+        lowered = jitted.lower(params_shape, specs)
+    else:  # decode
+        caches = specs["caches"]
+        caches_sh = _shardings_for(caches, bspec, mesh)
+        tok_sh = _shardings_for(
+            {"token": specs["token"], "pos": specs["pos"]}, bspec, mesh
+        )
+        step_fn = make_decode_step(model, cfg, pctx)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_sh, caches_sh, tok_sh["token"], tok_sh["pos"]),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_shape, caches, specs["token"], specs["pos"])
+
+    record["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 2)
+
+    terms = analyze_compiled(
+        compiled,
+        model_flops_total=model_flops_for(cfg, shape, backward=shape.kind == "train"),
+        n_devices=mesh.size,
+    )
+    record["roofline"] = terms.to_dict()
+    return record, compiled
+
+
+def lower_cell_cfg(cfg, shape_name: str, multi_pod: bool, *, unroll: bool,
+                   **kw):
+    """Probe entry: lower+compile an explicit (possibly reduced) config."""
+    _, compiled = lower_cell(
+        cfg.arch_id, shape_name, multi_pod,
+        cfg_override=cfg, unroll=unroll, **kw,
+    )
+    return compiled
+
+
+def _opt_state_shardings(opt_state_shape, cfg, pctx):
+    """Optimizer state shards like its parameter. The state pytree nests the
+    param path under 'm'/'v' (AdamW) or leaf dicts 'vr'/'vc'/'v' (Adafactor);
+    name rules reapply cleanly because _spec_for keys off path names and pads
+    rank — anything that doesn't divide falls back to replication."""
+    from jax.sharding import NamedSharding
+
+    from repro.parallel.sharding import _spec_for
+
+    from jax.sharding import PartitionSpec as P
+
+    def leaf_spec(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        if names and names[-1] in ("vr", "vc"):
+            return P()  # factored Adafactor stats are small: replicate
+        # strip bookkeeping heads ('m'/'v') so the param name drives the rules.
+        keys = [p for p in path if getattr(p, "key", None) not in ("m", "v")]
+        return _spec_for(tuple(keys), leaf, cfg, pctx)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(pctx.mesh, leaf_spec(path, leaf)),
+        opt_state_shape,
+    )
+
+
+def run_cells(archs, shapes, meshes, out_path, *, remat="full"):
+    results = {}
+    if out_path and Path(out_path).exists():
+        results = json.loads(Path(out_path).read_text())
+
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_name in meshes:
+                key = f"{arch}|{shape_name}|{mesh_name}"
+                if key in results and results[key].get("status") in ("ok", "skipped"):
+                    print(f"[cached] {key}", flush=True)
+                    continue
+                print(f"[lowering] {key}", flush=True)
+                try:
+                    record, compiled = lower_cell(
+                        arch, shape_name, mesh_name == "2x16x16", remat=remat
+                    )
+                    if compiled is not None:
+                        print(compiled.memory_analysis())
+                        ca = compiled.cost_analysis()
+                        print({k: v for k, v in (ca or {}).items()
+                               if k in ("flops", "bytes accessed")})
+                    del compiled
+                except Exception as e:  # record the failure, keep sweeping
+                    record = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "status": "error", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    print(f"[ERROR] {key}: {e}", flush=True)
+                jax.clear_caches()
+                results[key] = record
+                if out_path:
+                    Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+                    Path(out_path).write_text(json.dumps(results, indent=1))
+                status = record.get("status")
+                extra = ""
+                if status == "ok":
+                    r = record["roofline"]
+                    extra = (
+                        f" dominant={r['dominant']}"
+                        f" tc={r['t_compute_s']:.4f}s tm={r['t_memory_s']:.4f}s"
+                        f" tx={r['t_collective_s']:.4f}s useful={r['useful_ratio']:.2f}"
+                    )
+                print(f"[done] {key}: {status}{extra}", flush=True)
+    return results
+
+
+def run_probes(archs, shapes, out_path):
+    """Trip-count-corrected roofline probes (single-pod, per the assignment)."""
+    from repro.roofline.probe import probe_cell
+
+    results = {}
+    if out_path and Path(out_path).exists():
+        results = json.loads(Path(out_path).read_text())
+    for arch in archs:
+        for shape_name in shapes:
+            key = f"{arch}|{shape_name}"
+            if key in results and results[key].get("status") in ("ok", "skipped"):
+                print(f"[cached] {key}", flush=True)
+                continue
+            print(f"[probing] {key}", flush=True)
+            try:
+                rec = probe_cell(arch, shape_name, multi_pod=False)
+            except Exception as e:
+                rec = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"[ERROR] {key}: {e}", flush=True)
+            results[key] = rec
+            if out_path:
+                Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+                Path(out_path).write_text(json.dumps(results, indent=1))
+            if rec.get("status") == "ok":
+                print(f"[done] {key}: flops={rec['flops']:.3e} "
+                      f"bytes={rec['bytes']:.3e} cbytes={rec['cbytes']:.3e}",
+                      flush=True)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--probe", action="store_true",
+                    help="trip-count-corrected roofline probes (single-pod)")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    if args.probe:
+        out = args.out if args.out != "results/dryrun.json" else "results/probe.json"
+        run_probes(archs, shapes, out)
+        return
+    meshes = {
+        "single": ["16x16"], "multi": ["2x16x16"],
+        "both": ["16x16", "2x16x16"],
+    }[args.mesh]
+    run_cells(archs, shapes, meshes, args.out, remat=args.remat)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Training launcher: config → mesh → data pipeline → train loop with
+checkpoint/restart, preemption handling, straggler watchdog, and the
+paper-heuristic overlap knobs (prefetch chunks, gradient buckets).
+
+CPU-scale usage (the end-to-end example driver):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On a TPU pod the same entrypoint runs the full config on the production mesh
+(--mesh single|multi).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.configs.base import get_config
+from repro.data.pipeline import PrefetchPipeline
+from repro.data.synthetic import SyntheticLMDataset
+from repro.ft.preemption import PreemptionHandler
+from repro.ft.watchdog import StepWatchdog
+from repro.launch.mesh import make_ctx, make_production_mesh
+from repro.models.registry import build_model
+from repro.optim import adamw, cosine_warmup
+from repro.parallel.ctx import ParallelCtx
+from repro.parallel.sharding import make_train_shardings
+from repro.train.step import init_train_state, make_train_step
+
+
+def run_training(
+    *,
+    arch: str,
+    steps: int,
+    smoke: bool = True,
+    global_batch: int = 8,
+    seq_len: int = 128,
+    ckpt_dir: str | None = None,
+    save_every: int = 50,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+    use_mesh: str | None = None,
+    log_every: int = 10,
+    peak_lr: float = 3e-3,
+):
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.smoke()
+    cfg = dataclasses.replace(cfg, dtype="float32" if smoke else cfg.dtype)
+
+    if use_mesh:
+        mesh = make_production_mesh(multi_pod=use_mesh == "multi")
+        pctx = make_ctx(mesh, remat="full")
+    else:
+        mesh, pctx = None, ParallelCtx(mesh=None, remat="none")
+
+    model = build_model(cfg)
+    optimizer = adamw(cosine_warmup(peak_lr, steps // 20 + 1, steps))
+    train_step = make_train_step(
+        model, cfg, pctx, optimizer,
+        microbatches=microbatches, compress_grads=compress_grads,
+    )
+    jitted = jax.jit(train_step, donate_argnums=(0,))
+
+    state = init_train_state(
+        model, cfg, optimizer, jax.random.PRNGKey(0),
+        max_dec_len=seq_len, compress_grads=compress_grads,
+    )
+
+    mgr = CheckpointManager(ckpt_dir, save_every=save_every) if ckpt_dir else None
+    start_step = 0
+    if mgr and mgr.latest_step() is not None:
+        state, start_step = mgr.restore(state)
+        print(f"[resume] restored step {start_step}", flush=True)
+
+    data = SyntheticLMDataset(
+        vocab_size=cfg.vocab_size, seq_len=seq_len, global_batch=global_batch
+    )
+    pipe = PrefetchPipeline(data.batch_at, start_step=start_step, depth=2)
+    preempt = PreemptionHandler()
+    watchdog = StepWatchdog(hang_timeout_s=600.0)
+
+    losses = []
+    try:
+        for step, batch in pipe:
+            if step >= steps or preempt.requested:
+                break
+            t0 = time.perf_counter()
+            state, metrics = jitted(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            watchdog.beat(step, dt)
+            losses.append(loss)
+            if step % log_every == 0:
+                print(
+                    f"step {step:5d} loss {loss:.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f} ms",
+                    flush=True,
+                )
+            if mgr:
+                mgr.maybe_save(step + 1, state)
+        if mgr:
+            mgr.maybe_save(int(state.step), state, force=True)
+            mgr.wait()
+    finally:
+        pipe.close()
+        watchdog.close()
+        preempt.restore()
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    args = ap.parse_args()
+    losses = run_training(
+        arch=args.arch, steps=args.steps, smoke=args.smoke,
+        global_batch=args.batch, seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir, save_every=args.save_every,
+        microbatches=args.microbatches, compress_grads=args.compress_grads,
+        use_mesh=args.mesh,
+    )
+    if losses:
+        k = max(len(losses) // 10, 1)
+        print(f"first-{k} mean loss {np.mean(losses[:k]):.4f} -> "
+              f"last-{k} mean loss {np.mean(losses[-k:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

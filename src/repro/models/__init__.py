@@ -1,0 +1,6 @@
+"""Model zoo: composable layers + per-family assemblies for the 10 assigned
+architectures (dense / MoE / SSM / hybrid / enc-dec / VLM)."""
+
+from repro.models.registry import build_model, Model
+
+__all__ = ["build_model", "Model"]

@@ -1,0 +1,153 @@
+"""Encoder-decoder assembly (whisper-medium backbone).
+
+The conv audio frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings. Positions are absolute (sinusoidal encoder,
+learned decoder), no RoPE — faithful to whisper. Decode caches: per-layer
+self-attention KV (rolling) + cross-attention KV (computed once at prefill).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers.attention import (
+    KVCache,
+    attention_apply,
+    init_attention,
+    make_kv_cache,
+)
+from repro.models.layers.embedding import init_embedding, logits_out, padded_vocab
+from repro.models.layers.mlp import init_mlp, mlp_apply
+from repro.models.layers.norms import init_layernorm, layer_norm
+from repro.parallel.ctx import ParallelCtx
+
+
+def _sinusoidal(length: int, d: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def _init_enc_layer(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_layernorm(cfg.d_model),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "ln2": init_layernorm(cfg.d_model),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_layernorm(cfg.d_model),
+        "self_attn": init_attention(ks[0], cfg, dtype),
+        "ln_x": init_layernorm(cfg.d_model),
+        "xattn": init_attention(ks[1], cfg, dtype),
+        "ln2": init_layernorm(cfg.d_model),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig, *, max_dec_len: int = 4096) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.dec_layers)
+    return {
+        "emb": init_embedding(ks[2], cfg, dtype),
+        "dec_pos": jax.random.normal(ks[3], (max_dec_len, cfg.d_model), dtype) * 0.01,
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+        "enc_ln": init_layernorm(cfg.d_model),
+        "dec_ln": init_layernorm(cfg.d_model),
+    }
+
+
+def encode(params: dict, frames: jax.Array, cfg: ArchConfig, pctx: ParallelCtx) -> jax.Array:
+    """frames: [B, T_enc, D] precomputed frame embeddings (frontend stub)."""
+    b, t, d = frames.shape
+    x = frames + _sinusoidal(t, d).astype(frames.dtype)
+    x = pctx.shard(x, pctx.batch_axes, None, None)
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def body(x, layer_p):
+        h = layer_norm(x, layer_p["ln1"], cfg.norm_eps)
+        h, _ = attention_apply(layer_p["attn"], h, positions, cfg, pctx, causal=False)
+        x = x + h
+        h = layer_norm(x, layer_p["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(layer_p["mlp"], h, cfg.activation, pctx)
+        return x, None
+
+    from repro.models.transformer import maybe_scan
+
+    x, _ = maybe_scan(body, x, params["enc_layers"], unroll=pctx.unroll_layers)
+    return layer_norm(x, params["enc_ln"], cfg.norm_eps)
+
+
+def decode(
+    params: dict,
+    tokens: jax.Array,             # [B, S]
+    enc_out: jax.Array,            # [B, T_enc, D]
+    cfg: ArchConfig,
+    pctx: ParallelCtx,
+    *,
+    positions: Optional[jax.Array] = None,
+    caches: Optional[Dict[str, Any]] = None,
+    cache_index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["emb"]["embed"][tokens] + params["dec_pos"][positions]
+    x = pctx.shard(x, pctx.batch_axes, None, None)
+
+    def body(carry, scanned):
+        x = carry
+        lp = scanned["layers"]
+        kv_in = scanned.get("kv")
+        h = layer_norm(x, lp["ln1"], cfg.norm_eps)
+        h, new_kv = attention_apply(
+            lp["self_attn"], h, positions, cfg, pctx,
+            cache=KVCache(*kv_in) if kv_in is not None else None,
+            cache_index=cache_index,
+        )
+        x = x + h
+        h = layer_norm(x, lp["ln_x"], cfg.norm_eps)
+        h, _ = attention_apply(
+            lp["xattn"], h, positions, cfg, pctx,
+            causal=False, xattn_kv=(enc_out, enc_out),
+        )
+        x = x + h
+        h = layer_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, cfg.activation, pctx)
+        out = {"kv": new_kv} if new_kv is not None else {}
+        return x, out
+
+    from repro.models.transformer import maybe_scan
+
+    scanned: Dict[str, Any] = {"layers": params["dec_layers"]}
+    if caches is not None:
+        scanned["kv"] = caches["kv"]
+    x, scanned_out = maybe_scan(body, x, scanned, unroll=pctx.unroll_layers)
+    x = layer_norm(x, params["dec_ln"], cfg.norm_eps)
+    logits = logits_out(params["emb"], x, cfg, pctx)
+    new_caches = scanned_out if scanned_out else None
+    return logits, new_caches
+
+
+def make_encdec_caches(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    one = make_kv_cache(cfg, batch, max_len, dtype)
+    return {
+        "kv": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.dec_layers,) + a.shape), one
+        )
+    }

@@ -1,0 +1,180 @@
+"""Hybrid assembly (zamba2-7b): Mamba2 trunk + one weight-SHARED attention
+block applied every ``shared_attn_every`` SSM layers on [hidden; embedding]
+(2d→d in-projection) — the Zamba design (per-invocation LoRA omitted;
+DESIGN.md §Arch-applicability).
+
+Layout: ``n_super`` super-blocks of [shared-attn + E ssm layers] scanned with
+stacked params, plus a scanned tail of leftover SSM layers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers.attention import (
+    KVCache,
+    attention_apply,
+    init_attention,
+    make_kv_cache,
+)
+from repro.models.layers.embedding import embed_tokens, init_embedding, logits_out
+from repro.models.layers.mlp import init_mlp, mlp_apply
+from repro.models.layers.norms import init_rmsnorm, rms_norm
+from repro.models.layers.ssm import SSMState, init_ssm, make_ssm_state, ssm_apply
+from repro.parallel.ctx import ParallelCtx
+from repro.models.transformer import _remat_wrap, maybe_scan
+
+
+def _split(cfg: ArchConfig) -> Tuple[int, int, int]:
+    e = cfg.shared_attn_every
+    n_super = cfg.num_layers // e
+    tail = cfg.num_layers - n_super * e
+    return n_super, e, tail
+
+
+def _init_ssm_layer(key, cfg, dtype):
+    return {"ln": init_rmsnorm(cfg.d_model), "ssm": init_ssm(key, cfg, dtype)}
+
+
+def init_hybrid(key, cfg: ArchConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    n_super, e, tail = _split(cfg)
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+
+    body_keys = jax.random.split(ks[0], n_super * e).reshape(n_super, e, 2)
+    stacked = jax.vmap(jax.vmap(lambda k: _init_ssm_layer(k, cfg, dtype)))(body_keys)
+    params = {
+        "emb": init_embedding(ks[1], cfg, dtype),
+        "ssm_layers": stacked,
+        "final_ln": init_rmsnorm(d),
+        "shared": {
+            "ln_in": init_rmsnorm(2 * d),
+            "w_in": jax.random.normal(ks[2], (2 * d, d), dtype) / math.sqrt(2 * d),
+            "attn": init_attention(ks[3], cfg, dtype),
+            "ln_mlp": init_rmsnorm(d),
+            "mlp": init_mlp(ks[4], d, cfg.d_ff, "gelu_gated", dtype),
+        },
+    }
+    if tail:
+        tail_keys = jax.random.split(ks[5], tail)
+        params["tail_layers"] = jax.vmap(
+            lambda k: _init_ssm_layer(k, cfg, dtype)
+        )(tail_keys)
+    return params
+
+
+def _shared_block(shared, x, x0, positions, cfg, pctx, kv, cache_index):
+    h = jnp.concatenate([x, x0], axis=-1)
+    h = rms_norm(h, shared["ln_in"], cfg.norm_eps)
+    h = h @ shared["w_in"]
+    h, new_kv = attention_apply(
+        shared["attn"], h, positions, cfg, pctx,
+        cache=kv, cache_index=cache_index,
+    )
+    x = x + h
+    h = rms_norm(x, shared["ln_mlp"], cfg.norm_eps)
+    x = x + mlp_apply(shared["mlp"], h, "gelu_gated", pctx)
+    return x, new_kv
+
+
+def hybrid_forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ArchConfig,
+    pctx: ParallelCtx,
+    *,
+    positions: Optional[jax.Array] = None,
+    caches: Optional[Dict[str, Any]] = None,
+    cache_index: Optional[jax.Array] = None,
+    want_state: bool = False,
+    return_logits: bool = True,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    n_super, e, tail = _split(cfg)
+    b = tokens.shape[0]
+    x0 = embed_tokens(params["emb"], tokens, cfg, pctx)
+    s = x0.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def ssm_layer(lp, x, st):
+        h, new_st = ssm_apply(
+            lp["ssm"], rms_norm(x, lp["ln"], cfg.norm_eps), cfg, pctx,
+            state=st, return_state=want_state,
+        )
+        return x + h, new_st
+
+    def body(carry, scanned):
+        x = carry
+        lp = scanned["layers"]
+        kv_in = scanned.get("kv")
+        ssm_in = scanned.get("ssm")
+        x, new_kv = _shared_block(
+            params["shared"], x, x0, positions, cfg, pctx,
+            KVCache(*kv_in) if kv_in is not None else None, cache_index,
+        )
+        new_states = []
+        for i in range(e):
+            st = jax.tree.map(lambda a: a[i], ssm_in) if ssm_in is not None else None
+            st = SSMState(*st) if st is not None else None
+            x, nst = ssm_layer(jax.tree.map(lambda a: a[i], lp), x, st)
+            if nst is not None:
+                new_states.append(nst)
+        out: Dict[str, Any] = {}
+        if new_kv is not None:
+            out["kv"] = new_kv
+        if new_states:
+            out["ssm"] = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
+        return x, out
+
+    scanned: Dict[str, Any] = {"layers": params["ssm_layers"]}
+    if caches is not None:
+        scanned["kv"] = caches["kv"]
+        scanned["ssm"] = caches["ssm"]
+    x, scanned_out = maybe_scan(
+        _remat_wrap(body, pctx), x0, scanned, unroll=pctx.unroll_layers
+    )
+
+    new_caches = dict(scanned_out) if scanned_out else None
+    if tail:
+        def tail_body(carry, scanned_t):
+            x = carry
+            st = scanned_t.get("ssm")
+            st = SSMState(*st) if st is not None else None
+            x, nst = ssm_layer(scanned_t["layers"], x, st)
+            return x, {"ssm": nst} if nst is not None else {}
+
+        scanned_t: Dict[str, Any] = {"layers": params["tail_layers"]}
+        if caches is not None:
+            scanned_t["ssm"] = caches["tail_ssm"]
+        x, tail_out = maybe_scan(tail_body, x, scanned_t, unroll=pctx.unroll_layers)
+        if tail_out:
+            new_caches = new_caches or {}
+            new_caches["tail_ssm"] = tail_out["ssm"]
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if not return_logits:
+        return x, new_caches, aux
+    return logits_out(params["emb"], x, cfg, pctx), new_caches, aux
+
+
+def make_hybrid_caches(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    n_super, e, tail = _split(cfg)
+
+    def stack(tree, *lead):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, tuple(lead) + a.shape), tree)
+
+    caches = {
+        "kv": stack(make_kv_cache(cfg, batch, max_len, dtype), n_super),
+        "ssm": stack(make_ssm_state(cfg, batch), n_super, e),
+    }
+    if tail:
+        caches["tail_ssm"] = stack(make_ssm_state(cfg, batch), tail)
+    return caches

@@ -1,0 +1,58 @@
+"""Token embeddings + output head with TP-padded vocab.
+
+The vocab is padded to a multiple of 256 so it shards cleanly over the
+``model`` axis (e.g. whisper's 51865, internvl2's 92553); padded logits are
+masked to -inf so they never win and gradients to padding rows are zero.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.ctx import ParallelCtx
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD) * VOCAB_PAD
+
+
+def init_embedding(key, cfg: ArchConfig, dtype) -> dict:
+    vp = padded_vocab(cfg.vocab_size)
+    ks = jax.random.split(key, 2)
+    p = {"embed": jax.random.normal(ks[0], (vp, cfg.d_model), dtype) * 0.02}
+    if not cfg.tie_embeddings:
+        p["unembed"] = (
+            jax.random.normal(ks[1], (cfg.d_model, vp), dtype)
+            / math.sqrt(cfg.d_model)
+        )
+    return p
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ArchConfig,
+                 pctx: ParallelCtx) -> jax.Array:
+    x = params["embed"][tokens]  # gather; vocab-sharded -> GSPMD handles
+    if cfg.emb_scale_by_sqrt_dim:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return pctx.shard(x, pctx.batch_axes, None, None)
+
+
+def logits_out(params: dict, x: jax.Array, cfg: ArchConfig,
+               pctx: ParallelCtx) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = x @ params["unembed"]
+    logits = pctx.shard(logits, pctx.batch_axes, None, "model")
+    if cfg.final_softcap is not None:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    vp = logits.shape[-1]
+    if vp != cfg.vocab_size:
+        mask = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits

@@ -1,0 +1,47 @@
+"""Dense MLPs: gated SiLU/GeLU (llama/qwen/gemma) and squared-ReLU (nemotron).
+
+TP layout: w1/w3 shard the hidden dim over ``model``; w2 contracts it (psum
+inserted by GSPMD); both additionally FSDP-shard the other dim over ``data``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.ctx import ParallelCtx
+
+
+def init_mlp(key, d: int, ff: int, activation: str, dtype) -> dict:
+    gated = activation.endswith("_gated")
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": jax.random.normal(ks[0], (d, ff), dtype) / math.sqrt(d),
+        "w2": jax.random.normal(ks[1], (ff, d), dtype) / math.sqrt(ff),
+    }
+    if gated:
+        p["w3"] = jax.random.normal(ks[2], (d, ff), dtype) / math.sqrt(d)
+    return p
+
+
+def mlp_apply(params: dict, x: jax.Array, activation: str, pctx: ParallelCtx) -> jax.Array:
+    ba = pctx.batch_axes
+    h = x @ params["w1"]
+    h = pctx.shard(h, ba, None, "model")
+    if activation == "silu_gated":
+        h = jax.nn.silu(h) * (x @ params["w3"])
+    elif activation == "gelu_gated":
+        h = jax.nn.gelu(h, approximate=True) * (x @ params["w3"])
+    elif activation == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif activation == "sq_relu":
+        r = jax.nn.relu(h)
+        h = r * r
+    else:
+        raise ValueError(activation)
+    h = pctx.shard(h, ba, None, "model")
+    y = h @ params["w2"]
+    return pctx.shard_residual(y)

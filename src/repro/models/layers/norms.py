@@ -1,0 +1,42 @@
+"""RMSNorm (the norm used by every assigned arch; whisper uses LayerNorm)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype=dtype)}
+
+
+def rms_norm(x: jax.Array, params, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    # "zero-centered" scale (gemma/qwen convention: weight stored as scale-1)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layer_norm(x: jax.Array, params, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+def init_gated_rmsnorm(d: int, dtype=jnp.float32):
+    """Mamba2's output norm: RMSNorm applied after SiLU gating."""
+    return {"scale": jnp.zeros((d,), dtype=dtype)}
+
+
+def gated_rms_norm(x: jax.Array, z: jax.Array, params, eps: float = 1e-5) -> jax.Array:
+    y = x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return rms_norm(y, params, eps)

@@ -1,0 +1,267 @@
+"""Mamba2 / SSD block, implemented as a partition method over time.
+
+The SSD chunked scan has exactly the paper's 3-stage partition structure
+(DESIGN.md §2.4):
+
+  Stage 1 (parallel over chunks)  — intra-chunk outputs + per-chunk reduced
+                                    state (the "interface equation");
+  Stage 2 (small sequential scan) — the inter-chunk state recurrence over
+                                    NC interface states;
+  Stage 3 (parallel over chunks)  — broadcast the incoming state into each
+                                    chunk's outputs.
+
+``cfg.ssm_chunk`` is the granularity knob the paper's heuristic tunes: bigger
+chunks mean more Stage-1 work per interface row (quadratic in chunk length)
+but a shorter Stage-2 recurrence and less inter-chunk traffic.
+
+TP note: the projections are kept SEPARATE (w_z/w_x/w_b/w_c/w_dt rather than
+one fused in_proj) so each output dim shards cleanly over ``model`` without
+slicing a sharded dimension at non-shard-aligned offsets; heads (and d_inner)
+shard over ``model``, the small B/C state projections replicate.
+
+Shapes follow the Mamba2 reference: d_inner = expand·d_model, H heads of
+head_dim P, shared (ngroups=1) B/C of state size N. Decode keeps a constant
+state — (conv_*, ssd) — per layer.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers.norms import gated_rms_norm, init_gated_rmsnorm
+from repro.parallel.ctx import ParallelCtx
+
+
+class SSMState(NamedTuple):
+    conv_x: jax.Array  # [B, K-1, d_inner]
+    conv_b: jax.Array  # [B, K-1, N]
+    conv_c: jax.Array  # [B, K-1, N]
+    ssd: jax.Array     # [B, H, P, N] (fp32)
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    di = cfg.ssm_d_inner
+    nh = cfg.ssm_heads
+    return di, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssm(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, nh, p, n = _dims(cfg)
+    ks = jax.random.split(key, 9)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_z": jax.random.normal(ks[0], (d, di), dtype) * s,
+        "w_x": jax.random.normal(ks[1], (d, di), dtype) * s,
+        "w_b": jax.random.normal(ks[2], (d, n), dtype) * s,
+        "w_c": jax.random.normal(ks[3], (d, n), dtype) * s,
+        "w_dt": jax.random.normal(ks[4], (d, nh), dtype) * s,
+        "conv_x_w": jax.random.normal(ks[5], (cfg.ssm_conv, di), dtype) * 0.2,
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_b_w": jax.random.normal(ks[6], (cfg.ssm_conv, n), dtype) * 0.2,
+        "conv_b_b": jnp.zeros((n,), dtype),
+        "conv_c_w": jax.random.normal(ks[7], (cfg.ssm_conv, n), dtype) * 0.2,
+        "conv_c_b": jnp.zeros((n,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, float(max(nh, 2)), nh, dtype=jnp.float32)
+        ),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_norm": init_gated_rmsnorm(di),
+        "out_proj": jax.random.normal(ks[8], (di, d), dtype) / math.sqrt(di),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over the sequence. x: [B, S, C]; w: [K, C]."""
+    k = w.shape[0]
+    if state is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        prev = state.astype(x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    ) + b
+    new_state = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(prev)
+    return jax.nn.silu(out), new_state
+
+
+def _segsum_decay(da_chunk: jax.Array) -> jax.Array:
+    """L[..., i, j] = exp(sum_{j<t<=i} dA_t) for i>=j else 0.
+    da_chunk: [..., Q, H] -> [..., H, Q, Q]."""
+    q = da_chunk.shape[-2]
+    cs = jnp.cumsum(da_chunk, axis=-2)  # [..., Q, H]
+    cs = jnp.moveaxis(cs, -1, -2)  # [..., H, Q]
+    diff = cs[..., :, None] - cs[..., None, :]  # [..., H, Q, Q]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: masked entries are i<j where diff>0 can overflow, and
+    # inf*0 in the VJP would poison gradients.
+    return jnp.exp(jnp.where(mask, diff, -1e30))
+
+
+def ssd_scan(
+    x: jax.Array,    # [B, S, H, P]  (pre-scaled inputs, NOT yet * dt)
+    dt: jax.Array,   # [B, S, H]     (softplus'd step sizes, fp32)
+    a: jax.Array,    # [H]           (negative decay rates, fp32)
+    b_in: jax.Array,  # [B, S, N]
+    c_in: jax.Array,  # [B, S, N]
+    *,
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # [B, H, P, N] initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, nh, p = x.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc = s // chunk
+
+    xf = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)  # pin fp32 (callers may run under x64)
+    a = a.astype(jnp.float32)
+    da = dt * a  # [B, S, H]  (<= 0)
+    # chunked views
+    xc = xf.reshape(bsz, nc, chunk, nh, p)
+    dtc = dt.reshape(bsz, nc, chunk, nh)
+    dac = da.reshape(bsz, nc, chunk, nh)
+    bc = b_in.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cc = c_in.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+
+    cum = jnp.cumsum(dac, axis=2)  # [B, NC, Q, H]
+
+    # ---- Stage 1a: intra-chunk (diagonal) outputs --------------------------
+    ldec = _segsum_decay(dac)  # [B, NC, H, Q, Q]
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)  # [B, NC, Q, Q]
+    u = xc * dtc[..., None]  # dt-scaled inputs
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", scores, ldec, u)
+
+    # ---- Stage 1b: per-chunk reduced state (interface equation) ------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [B, NC, Q, H]
+    s_chunk = jnp.einsum("bckn,bckh,bckhp->bchpn", bc, decay_to_end * dtc, xc)
+
+    # ---- Stage 2: inter-chunk interface recurrence --------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B, NC, H]
+
+    def step(h, inp):
+        dec, s_c = inp  # [B, H], [B, H, P, N]
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h
+
+    h_init = (
+        jnp.zeros((bsz, nh, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+    final_state, h_prev = jax.lax.scan(
+        step,
+        h_init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_chunk, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # [B, NC, H, P, N] state entering chunk
+
+    # ---- Stage 3: broadcast incoming state into chunk outputs ---------------
+    state_decay = jnp.exp(cum)  # [B, NC, Q, H]
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc, h_prev, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, nh, p)
+    return y, final_state
+
+
+def ssm_apply(
+    params: dict,
+    x: jax.Array,  # [B, S, D]
+    cfg: ArchConfig,
+    pctx: ParallelCtx,
+    *,
+    state: Optional[SSMState] = None,
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[SSMState]]:
+    bsz, s, d = x.shape
+    di, nh, p, n = _dims(cfg)
+    ba = pctx.batch_axes
+
+    z = pctx.shard(x @ params["w_z"], ba, None, "model")
+    xs = pctx.shard(x @ params["w_x"], ba, None, "model")
+    b_raw = x @ params["w_b"]
+    c_raw = x @ params["w_c"]
+    dt_raw = x @ params["w_dt"]
+
+    st = state
+    xs, conv_x_st = _causal_conv(
+        xs, params["conv_x_w"], params["conv_x_b"],
+        st.conv_x if st is not None else None,
+    )
+    xs = pctx.shard(xs, ba, None, "model")
+    b_in, conv_b_st = _causal_conv(
+        b_raw, params["conv_b_w"], params["conv_b_b"],
+        st.conv_b if st is not None else None,
+    )
+    c_in, conv_c_st = _causal_conv(
+        c_raw, params["conv_c_w"], params["conv_c_b"],
+        st.conv_c if st is not None else None,
+    )
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])  # [H], negative
+
+    xh = xs.reshape(bsz, s, nh, p)
+    if s == 1 and state is not None:
+        # Decode fast path: h' = h·exp(dt·a) + dt·(B ⊗ x); y = C·h' + D·x.
+        h = state.ssd.astype(jnp.float32)
+        dt1 = dt[:, 0, :]  # [B, H]
+        da = jnp.exp(dt1 * a[None, :])  # [B, H]
+        outer = jnp.einsum(
+            "bhp,bn->bhpn", xh[:, 0].astype(jnp.float32) * dt1[..., None],
+            b_in[:, 0].astype(jnp.float32),
+        )
+        h_new = h * da[..., None, None] + outer
+        y = jnp.einsum("bhpn,bn->bhp", h_new, c_in[:, 0].astype(jnp.float32))
+        y = y[:, None]  # [B, 1, H, P]
+        new_ssd = h_new
+    elif pctx.pallas_ssd:
+        from repro.kernels.ssd_stage1.ops import ssd_scan_pallas
+
+        y, new_ssd = ssd_scan_pallas(
+            xh, dt, a, b_in, c_in,
+            chunk=cfg.ssm_chunk,
+            h0=state.ssd if state is not None else None,
+        )
+    else:
+        y, new_ssd = ssd_scan(
+            xh, dt, a, b_in, c_in,
+            chunk=cfg.ssm_chunk,
+            h0=state.ssd if state is not None else None,
+        )
+
+    y = y + xh.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = gated_rms_norm(y, z, params["out_norm"], cfg.norm_eps)
+    y = pctx.shard(y, ba, None, "model")
+    out = y @ params["out_proj"]
+    out = pctx.shard_residual(out)
+
+    new_state = (
+        SSMState(
+            conv_x=conv_x_st, conv_b=conv_b_st, conv_c=conv_c_st,
+            ssd=new_ssd.astype(jnp.float32),
+        )
+        if (return_state or state is not None)
+        else None
+    )
+    return out, new_state
+
+
+def make_ssm_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    di, nh, p, n = _dims(cfg)
+    k1 = cfg.ssm_conv - 1
+    return SSMState(
+        conv_x=jnp.zeros((batch, k1, di), dtype),
+        conv_b=jnp.zeros((batch, k1, n), dtype),
+        conv_c=jnp.zeros((batch, k1, n), dtype),
+        ssd=jnp.zeros((batch, nh, p, n), jnp.float32),
+    )

@@ -1,0 +1,133 @@
+"""Uniform Model facade over the per-family assemblies.
+
+Batch dict conventions:
+  train   : tokens [B,S] int32, labels [B,S] int32 (+ patches [B,P,D] for vlm,
+            frames [B,T,D] for encdec/audio)
+  prefill : tokens [B,S] (+ patches / frames)
+  decode  : token [B,1] int32, pos [B] int32 (+ caches from make_caches/prefill)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as E
+from repro.models import hybrid as H
+from repro.models import transformer as T
+from repro.parallel.ctx import ParallelCtx
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------- init -----
+    def init(self, key, *, max_dec_len: int = 4096) -> dict:
+        if self.cfg.family == "encdec":
+            return E.init_encdec(key, self.cfg, max_dec_len=max_dec_len)
+        if self.cfg.family == "hybrid":
+            return H.init_hybrid(key, self.cfg)
+        return T.init_lm(key, self.cfg)
+
+    # ---------------------------------------------------------- training ----
+    def train_logits(
+        self, params: dict, batch: Dict[str, jax.Array], pctx: ParallelCtx
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Returns (logits over the LOSS positions, aux losses)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc_out = E.encode(params, batch["frames"], cfg, pctx)
+            logits, _ = E.decode(params, batch["tokens"], enc_out, cfg, pctx)
+            return logits, jnp.zeros((), jnp.float32)
+        if cfg.family == "hybrid":
+            logits, _, aux = H.hybrid_forward(params, batch["tokens"], cfg, pctx)
+            return logits, aux
+        patches = batch.get("patches")
+        logits, _, aux = T.lm_forward(
+            params, batch["tokens"], cfg, pctx, patch_embeds=patches
+        )
+        if patches is not None:
+            logits = logits[:, patches.shape[1]:, :]  # loss on text positions
+        return logits, aux
+
+    # ----------------------------------------------------------- serving ----
+    def make_caches(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return E.make_encdec_caches(cfg, batch, max_len)
+        if cfg.family == "hybrid":
+            return H.make_hybrid_caches(cfg, batch, max_len)
+        return T.make_decoder_caches(cfg, batch, max_len)
+
+    def prefill(
+        self, params: dict, batch: Dict[str, jax.Array], pctx: ParallelCtx,
+        *, max_len: Optional[int] = None,
+    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Run the prompt, returning (logits, caches primed at position S)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        max_len = max_len or s
+        caches = self.make_caches(b, max_len)
+        zero = jnp.zeros((b,), jnp.int32)
+        if cfg.family == "encdec":
+            enc_out = E.encode(params, batch["frames"], cfg, pctx)
+            logits, new_caches = E.decode(
+                params, tokens, enc_out, cfg, pctx,
+                caches=caches, cache_index=zero,
+            )
+            new_caches["enc_out"] = enc_out
+            return logits, new_caches
+        if cfg.family == "hybrid":
+            logits, new_caches, _ = H.hybrid_forward(
+                params, tokens, cfg, pctx,
+                caches=caches, cache_index=zero, want_state=True,
+            )
+            return logits, new_caches
+        patches = batch.get("patches")
+        logits, new_caches, _ = T.lm_forward(
+            params, tokens, cfg, pctx,
+            patch_embeds=patches, caches=caches, cache_index=zero,
+            want_state=True,
+        )
+        return logits, new_caches
+
+    def decode_step(
+        self, params: dict, caches: Dict[str, Any],
+        batch: Dict[str, jax.Array], pctx: ParallelCtx,
+    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """One token step. batch: token [B,1], pos [B]."""
+        cfg = self.cfg
+        token, pos = batch["token"], batch["pos"]
+        positions = pos[:, None]
+        if cfg.family == "encdec":
+            enc_out = caches["enc_out"]
+            dec_caches = {"kv": caches["kv"]}
+            logits, new_caches = E.decode(
+                params, token, enc_out, cfg, pctx,
+                positions=positions, caches=dec_caches, cache_index=pos,
+            )
+            new_caches["enc_out"] = enc_out
+            return logits, new_caches
+        if cfg.family == "hybrid":
+            logits, new_caches, _ = H.hybrid_forward(
+                params, token, cfg, pctx,
+                positions=positions, caches=caches, cache_index=pos,
+                want_state=True,
+            )
+            return logits, new_caches
+        logits, new_caches, _ = T.lm_forward(
+            params, token, cfg, pctx,
+            positions=positions, caches=caches, cache_index=pos,
+            want_state=True,
+        )
+        return logits, new_caches
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg)

@@ -1,0 +1,271 @@
+"""Decoder-only LM assembly (dense / MoE / SSM families + VLM frontend stub).
+
+Layers are scanned (`jax.lax.scan`) over stacked parameters so the HLO stays
+compact for 96-layer × 512-device dry-runs; gemma2's local/global alternation
+scans over pairs. Remat policy is applied to the scan body.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers.attention import (
+    KVCache,
+    attention_apply,
+    init_attention,
+    make_kv_cache,
+)
+from repro.models.layers.embedding import embed_tokens, init_embedding, logits_out
+from repro.models.layers.mlp import init_mlp, mlp_apply
+from repro.models.layers.moe import init_moe, moe_apply
+from repro.models.layers.norms import init_rmsnorm, rms_norm
+from repro.models.layers.ssm import SSMState, init_ssm, make_ssm_state, ssm_apply
+from repro.parallel.ctx import ParallelCtx
+
+
+def _dtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def maybe_scan(body_fn, carry, scanned, *, unroll: bool):
+    """lax.scan, or a python loop when probing (so every layer is counted)."""
+    if not unroll:
+        return jax.lax.scan(body_fn, carry, scanned)
+    n = jax.tree.leaves(scanned)[0].shape[0]
+    outs = []
+    for i in range(n):
+        carry, o = body_fn(carry, jax.tree.map(lambda a: a[i], scanned))
+        outs.append(o)
+    stacked = (
+        jax.tree.map(lambda *a: jnp.stack(a), *outs)
+        if outs and jax.tree.leaves(outs[0])
+        else ({} if isinstance(outs[0], dict) else None)
+    )
+    return carry, stacked
+
+
+def _remat_wrap(fn, pctx: ParallelCtx):
+    if pctx.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if pctx.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+# --------------------------------------------------------------- blocks -----
+def init_block(key, cfg: ArchConfig, dtype) -> dict:
+    """One transformer block of the arch's family (attention+MLP/MoE or SSM)."""
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm":
+        return {"ln1": init_rmsnorm(cfg.d_model), "ssm": init_ssm(ks[0], cfg, dtype)}
+    p = {
+        "ln1": init_rmsnorm(cfg.d_model),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    if cfg.post_block_norm:
+        p["post_ln1"] = init_rmsnorm(cfg.d_model)
+        p["post_ln2"] = init_rmsnorm(cfg.d_model)
+    return p
+
+
+def block_apply(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ArchConfig,
+    pctx: ParallelCtx,
+    *,
+    window: Optional[int],
+    kv_cache: Optional[KVCache],
+    ssm_state: Optional[SSMState],
+    cache_index: Optional[jax.Array],
+    want_state: bool,
+) -> Tuple[jax.Array, Optional[KVCache], Optional[SSMState], jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        h, new_state = ssm_apply(
+            params["ssm"], rms_norm(x, params["ln1"], cfg.norm_eps), cfg, pctx,
+            state=ssm_state, return_state=want_state,
+        )
+        return x + h, None, new_state, aux
+
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    h, new_kv = attention_apply(
+        params["attn"], h, positions, cfg, pctx,
+        window=window, cache=kv_cache, cache_index=cache_index,
+    )
+    if cfg.post_block_norm:
+        h = rms_norm(h, params["post_ln1"], cfg.norm_eps)
+    x = x + h
+
+    h = rms_norm(x, params["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        h, aux = moe_apply(params["moe"], h, cfg, pctx)
+    else:
+        h = mlp_apply(params["mlp"], h, cfg.activation, pctx)
+    if cfg.post_block_norm:
+        h = rms_norm(h, params["post_ln2"], cfg.norm_eps)
+    return x + h, new_kv, None, aux
+
+
+# ----------------------------------------------------------------- model ----
+def _group_size(cfg: ArchConfig) -> int:
+    return 2 if cfg.alternate_local_global else 1
+
+
+def _windows(cfg: ArchConfig) -> Tuple[Optional[int], ...]:
+    if cfg.alternate_local_global:
+        return (cfg.local_window, None)  # local layer first, then global
+    return (None,) if cfg.local_window is None else (cfg.local_window,)
+
+
+def init_lm(key, cfg: ArchConfig) -> dict:
+    dtype = _dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    g = _group_size(cfg)
+    n_groups = cfg.num_layers // g
+    assert cfg.num_layers % g == 0
+
+    layer_keys = jax.random.split(ks[0], cfg.num_layers).reshape(n_groups, g, 2)
+    stacked = jax.vmap(
+        jax.vmap(lambda k: init_block(k, cfg, dtype))
+    )(layer_keys)  # leaves: [n_groups, g, ...]
+
+    params = {
+        "emb": init_embedding(ks[1], cfg, dtype),
+        "layers": stacked,
+        "final_ln": init_rmsnorm(cfg.d_model),
+    }
+    if cfg.frontend_tokens and cfg.family == "vlm":
+        params["connector"] = (
+            jax.random.normal(ks[2], (cfg.d_model, cfg.d_model), dtype)
+            / jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)).astype(dtype)
+        )
+    return params
+
+
+def _stack_layers_apply(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ArchConfig,
+    pctx: ParallelCtx,
+    *,
+    caches: Optional[Dict[str, Any]] = None,
+    cache_index: Optional[jax.Array] = None,
+    want_state: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    g = _group_size(cfg)
+    windows = _windows(cfg)
+
+    def body(carry, scanned):
+        x, aux = carry
+        layer_p = scanned["layers"]
+        kv_in = scanned.get("kv")
+        ssm_in = scanned.get("ssm")
+        new_kvs, new_ssms = [], []
+        for i in range(g):
+            sub_p = jax.tree.map(lambda a: a[i], layer_p)
+            kv_i = jax.tree.map(lambda a: a[i], kv_in) if kv_in is not None else None
+            ssm_i = jax.tree.map(lambda a: a[i], ssm_in) if ssm_in is not None else None
+            kv_i = KVCache(*kv_i) if kv_i is not None else None
+            ssm_i = SSMState(*ssm_i) if ssm_i is not None else None
+            x, nkv, nssm, a = block_apply(
+                sub_p, x, positions, cfg, pctx,
+                window=windows[i % len(windows)],
+                kv_cache=kv_i, ssm_state=ssm_i, cache_index=cache_index,
+                want_state=want_state,
+            )
+            aux = aux + a
+            if nkv is not None:
+                new_kvs.append(nkv)
+            if nssm is not None:
+                new_ssms.append(nssm)
+        out: Dict[str, Any] = {}
+        if new_kvs:
+            out["kv"] = jax.tree.map(lambda *a: jnp.stack(a), *new_kvs)
+        if new_ssms:
+            out["ssm"] = jax.tree.map(lambda *a: jnp.stack(a), *new_ssms)
+        return (x, aux), out
+
+    scanned_in: Dict[str, Any] = {"layers": params["layers"]}
+    if caches is not None:
+        if "kv" in caches:
+            scanned_in["kv"] = caches["kv"]
+        if "ssm" in caches:
+            scanned_in["ssm"] = caches["ssm"]
+
+    body_fn = _remat_wrap(body, pctx)
+    (x, aux), scanned_out = maybe_scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), scanned_in,
+        unroll=pctx.unroll_layers,
+    )
+
+    # scanned_out keeps the [n_groups, g, ...] cache layout of the input, so
+    # decode can feed it straight back in next step.
+    new_caches = scanned_out if scanned_out else None
+    return x, new_caches, aux
+
+
+def lm_forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ArchConfig,
+    pctx: ParallelCtx,
+    *,
+    patch_embeds: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    caches: Optional[Dict[str, Any]] = None,
+    cache_index: Optional[jax.Array] = None,
+    want_state: bool = False,
+    return_logits: bool = True,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """Shared forward: returns (logits_or_hidden, new_caches, aux_loss)."""
+    b = tokens.shape[0]
+    x = embed_tokens(params["emb"], tokens, cfg, pctx)
+    if patch_embeds is not None:
+        proj = patch_embeds.astype(x.dtype) @ params["connector"]
+        x = jnp.concatenate([proj, x], axis=1)
+    s = x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, new_caches, aux = _stack_layers_apply(
+        params, x, positions, cfg, pctx,
+        caches=caches, cache_index=cache_index, want_state=want_state,
+    )
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if not return_logits:
+        return x, new_caches, aux
+    return logits_out(params["emb"], x, cfg, pctx), new_caches, aux
+
+
+# ------------------------------------------------------------------ caches --
+def make_decoder_caches(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dtype = _dtype_of(cfg)
+    g = _group_size(cfg)
+    n_groups = cfg.num_layers // g
+
+    def stack(make_one):
+        one = make_one()
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups, g) + a.shape), one
+        )
+
+    caches: Dict[str, Any] = {}
+    if cfg.family == "ssm":
+        caches["ssm"] = stack(lambda: make_ssm_state(cfg, batch))
+    else:
+        caches["kv"] = stack(lambda: make_kv_cache(cfg, batch, max_len, dtype))
+    return caches

@@ -1,0 +1,9 @@
+"""Optimizers (hand-rolled, optax-style init/update pairs), LR schedules, and
+error-feedback gradient compression."""
+
+from repro.optim.adamw import adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.schedule import cosine_warmup
+from repro.optim.grad_compress import ef_int8_compressor
+
+__all__ = ["adamw", "adafactor", "cosine_warmup", "ef_int8_compressor"]

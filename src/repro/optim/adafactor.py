@@ -1,0 +1,77 @@
+"""Adafactor (factored second moment, no first moment by default).
+
+Memory per matrix parameter is O(rows+cols) instead of O(rows·cols) — the
+trillion-parameter configs (kimi-k2) use this so optimizer state doesn't
+triple the per-chip footprint (EXPERIMENTS.md §Dry-run discusses the budget).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+def adafactor(
+    lr: Callable | float,
+    *,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),       # row stats
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        d = decay
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = d * st["vr"] + (1 - d) * jnp.mean(g2, axis=-1)
+                vc = d * st["vc"] + (1 - d) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                pre = (
+                    vr[..., None] / denom[..., None]
+                ) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(pre, eps))
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = d * st["v"] + (1 - d) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_st = {"v": v}
+            # update clipping (RMS <= threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), new_st
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_s = treedef.flatten_up_to(state)
+        outs = [upd(g, s, p) for g, s, p in zip(leaves_g, leaves_s, leaves_p)]
+        updates = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_state = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return updates, new_state
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,6 @@
+"""Distribution: mesh context, sharding rules, and overlap-tuned collectives."""
+
+from repro.parallel.ctx import ParallelCtx
+from repro.parallel.sharding import param_specs, batch_spec, make_train_shardings
+
+__all__ = ["ParallelCtx", "param_specs", "batch_spec", "make_train_shardings"]

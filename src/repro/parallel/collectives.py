@@ -1,0 +1,82 @@
+"""Bucketed gradient collectives with ML-tuned overlap granularity.
+
+This is the framework's flagship instantiation of the paper's heuristic
+(DESIGN.md §2.3): the cross-pod gradient all-reduce is split into ``n``
+buckets so communication overlaps the backward pass. ``n`` follows the same
+law as CUDA streams — residual exposed comm ∝ 1/n, per-collective overhead
+grows with n — and is chosen by Eq. 6 via ``autotune.overlap``.
+
+Under GSPMD the all-reduce is inserted by XLA, so bucketing is expressed by
+partitioning the gradient pytree into ``n`` groups and running each group's
+(reduce) inside `jax.lax.optimization_barrier`-separated stages, which keeps
+XLA from fusing them back into one giant collective and lets the scheduler
+interleave them with remaining backward compute.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.autotune.overlap import tune_gradient_buckets
+
+
+def plan_buckets(
+    params_shape: Any,
+    *,
+    n_buckets: int,
+) -> List[List[int]]:
+    """Greedy size-balanced assignment of param leaves to buckets."""
+    leaves = jax.tree.leaves(params_shape)
+    sizes = [int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize for l in leaves]
+    order = sorted(range(len(leaves)), key=lambda i: -sizes[i])
+    buckets: List[List[int]] = [[] for _ in range(n_buckets)]
+    loads = [0] * n_buckets
+    for i in order:
+        j = loads.index(min(loads))
+        buckets[j].append(i)
+        loads[j] += sizes[i]
+    return [b for b in buckets if b]
+
+
+def tuned_bucket_count(
+    params_shape: Any,
+    *,
+    link_bandwidth_Bps: float = 50e9,
+    backward_compute_s: float,
+    per_collective_latency_s: float = 15e-6,
+) -> Tuple[int, float]:
+    """Paper-heuristic bucket count for this parameter set."""
+    leaves = jax.tree.leaves(params_shape)
+    grad_bytes = float(
+        sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize for l in leaves)
+    )
+    return tune_gradient_buckets(
+        grad_bytes=grad_bytes,
+        link_bandwidth_Bps=link_bandwidth_Bps,
+        backward_compute_s=backward_compute_s,
+        per_collective_latency_s=per_collective_latency_s,
+    )
+
+
+def bucketed_psum(grads: Any, axis_name: str, n_buckets: int) -> Any:
+    """psum the gradient pytree in n size-balanced, barrier-separated buckets
+    (for shard_map-style training loops)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    buckets = plan_buckets(grads, n_buckets=n_buckets)
+    out: List[Any] = list(leaves)
+    prev_token = None
+    for bucket in buckets:
+        group = [out[i] for i in bucket]
+        if prev_token is not None:
+            # serialize bucket starts so the scheduler can overlap each with
+            # remaining backward compute instead of one monolithic collective
+            group = list(jax.lax.optimization_barrier(tuple(group)))
+        reduced = [jax.lax.psum(g, axis_name) for g in group]
+        prev_token = reduced[0]
+        for i, r in zip(bucket, reduced):
+            out[i] = r
+    return jax.tree.unflatten(treedef, out)

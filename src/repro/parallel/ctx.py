@@ -1,0 +1,117 @@
+"""Parallel execution context threaded through the model code.
+
+Carries the mesh axis names and provides ``shard`` (a no-op without a mesh so
+the same model code runs in single-device smoke tests and under the
+production mesh). Axis conventions (DESIGN.md §3):
+
+  pod    — outermost data-parallel axis across pods (multi-pod mesh only)
+  data   — within-pod data parallelism; FSDP shards params over it; sequence
+           parallelism shards the sequence over it for long-context cells
+  model  — tensor parallelism (attention heads / MLP hidden / vocab) and
+           expert parallelism for MoE layers
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Optional[Mesh] = None
+    data_axes: Tuple[str, ...] = ("data",)   # ("pod","data") on the multi-pod mesh
+    model_axis: Optional[str] = "model"
+    fsdp_axis: Optional[str] = "data"        # param sharding axis (ZeRO-3)
+    seq_shard: bool = False                  # sequence parallelism (long_500k)
+    seq_tp: bool = False                     # Megatron-SP: residual stream
+                                             # seq-sharded over `model` (§Perf Q1c)
+    remat: str = "none"                      # none | full | dots
+    # Run the SSD intra-chunk stage through the Pallas kernel
+    # (repro.kernels.ssd_stage1) instead of pure jnp — the TPU path.
+    pallas_ssd: bool = False
+    # Beyond-paper (§Perf K1): gather FSDP-sharded expert weights as int8
+    # (per-expert scales, straight-through estimator) — halves the dominant
+    # MoE collective vs bf16 gathers.
+    int8_moe_gather: bool = False
+    # Roofline probes: python-loop instead of lax.scan so XLA cost_analysis
+    # counts every iteration (while bodies are otherwise counted ONCE).
+    unroll_layers: bool = False
+    unroll_attn: bool = False
+
+    # ------------------------------------------------------------------ api --
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return self.data_axes
+
+    def axis_size(self, name: Optional[str]) -> int:
+        if self.mesh is None or name is None:
+            return 1
+        return self.mesh.shape[name]
+
+    @property
+    def tp(self) -> int:
+        return self.axis_size(self.model_axis)
+
+    @property
+    def dp(self) -> int:
+        n = 1
+        for a in self.data_axes:
+            n *= self.axis_size(a)
+        return n
+
+    def divisible_by_tp(self, n: int) -> bool:
+        return self.tp > 1 and n % self.tp == 0
+
+    def spec(self, *axes) -> P:
+        """Build a PartitionSpec, dropping axes absent from the mesh.
+
+        The literal string "model" is a SYMBOL resolving to ``model_axis``
+        (None under the dp_only strategy, where the physical 'model' mesh
+        axis is repurposed for data parallelism)."""
+        if self.mesh is None:
+            return P()
+
+        def resolve(a):
+            return self.model_axis if a == "model" else a
+
+        cleaned = []
+        for a in axes:
+            if a is None:
+                cleaned.append(None)
+            elif isinstance(a, tuple):
+                kept = tuple(
+                    r for r in (resolve(x) for x in a)
+                    if r is not None and r in self.mesh.axis_names
+                )
+                cleaned.append(kept if kept else None)
+            else:
+                r = resolve(a)
+                cleaned.append(r if r is not None and r in self.mesh.axis_names else None)
+        return P(*cleaned)
+
+    def shard(self, x, *axes):
+        """with_sharding_constraint; no-op without a mesh."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*axes))
+        )
+
+    def shard_residual(self, x):
+        """Residual-stream constraint for [B, S, D] activations. Under
+        Megatron-SP (seq_tp) the sequence dim shards over `model`, so the
+        per-block psum lowers to reduce-scatter + all-gather (≈2× less
+        activation collective traffic) and norms run seq-sharded."""
+        if self.seq_tp and x.ndim == 3 and self.model_axis is not None \
+                and x.shape[1] % max(self.tp, 1) == 0:
+            return self.shard(x, self.batch_axes, "model", None)
+        return self.shard(x, self.batch_axes, None, None)
+
+    def sharding(self, *axes) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*axes))

@@ -1,0 +1,226 @@
+"""Parameter/batch sharding rules (DP/TP/EP/FSDP; DESIGN.md §3).
+
+Rules are keyed by parameter NAME (the last path component) with family
+context, and return a PartitionSpec for the TRAILING dims of the leaf; the
+leading layer-stack dims ([n_groups, g, ...]) are padded with None, which
+makes one rule table serve stacked and unstacked layouts alike.
+
+Conventions:
+  model  — TP: attention heads, MLP hidden, vocab; EP: the expert dim
+  data   — FSDP (ZeRO-3): the "other" dim of every big matrix
+  pod    — pure data parallelism (params replicated across pods; gradient
+           all-reduce crosses the pod axis)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.parallel.ctx import ParallelCtx
+
+# name -> trailing-dims spec template; F = fsdp axis, M = model axis.
+_F, _M = "__fsdp__", "__model__"
+
+_RULES: Dict[str, Tuple] = {
+    # embeddings
+    "embed": (_M, _F),        # [V, D]
+    "unembed": (_F, _M),      # [D, V]
+    "dec_pos": (_F, None),    # [T, D]
+    "connector": (_F, _M),    # [D, D]
+    # attention
+    "wq": (_F, _M),
+    "wk": (_F, _M),           # demoted to (_F, None) when kv % tp != 0
+    "wv": (_F, _M),
+    "wo": (_M, _F),
+    # dense mlp
+    "w1": (_F, _M),
+    "w2": (_M, _F),
+    "w3": (_F, _M),
+    # moe (rank-3 leaves; detected by rank, see _spec_for)
+    "router": (None, None),
+    # ssm
+    "w_z": (_F, _M),
+    "w_x": (_F, _M),
+    "w_b": (_F, None),
+    "w_c": (_F, None),
+    "w_dt": (_F, _M),
+    "conv_x_w": (None, _M),
+    "conv_x_b": (_M,),
+    "conv_b_w": (None, None),
+    "conv_b_b": (None,),
+    "conv_c_w": (None, None),
+    "conv_c_b": (None,),
+    "dt_bias": (_M,),
+    "a_log": (_M,),
+    "d_skip": (_M,),
+    "out_proj": (_M, _F),
+    # hybrid shared block
+    "w_in": (_F, _M),
+}
+
+_MOE_RULES: Dict[str, Tuple] = {
+    "w1": (_M, _F, None),     # [E, D, F]
+    "w3": (_M, _F, None),
+    "w2": (_M, None, _F),     # [E, F, D]
+}
+
+# vector-ish leaves (norm scales over a TP-sharded feature dim)
+_MODEL_DIM_VECTORS = {"out_norm"}
+
+
+def _spec_for(path: Tuple, leaf, cfg: ArchConfig, pctx: ParallelCtx) -> P:
+    keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    keys = [k for k in keys if k is not None]
+    name = keys[-1] if keys else ""
+    parents = set(keys[:-1])
+
+    tmpl: Optional[Tuple] = None
+    if pctx.model_axis is None and name in ("embed", "unembed", "dec_pos"):
+        # dp_only (§Perf Q1): never shard d_model of the embedding family
+        # across the huge fsdp group — the token gather then re-partitions
+        # pathologically (SPMD "involuntary full rematerialization").
+        tmpl = {"embed": (_F, None), "unembed": (None, _F),
+                "dec_pos": (_F, None)}[name]
+    elif name in ("w1", "w2", "w3") and "moe" in parents and "shared" not in parents:
+        tmpl = _MOE_RULES[name]
+    elif name == "scale" and any(p in _MODEL_DIM_VECTORS for p in parents):
+        tmpl = (_M,)
+    elif name in _RULES:
+        tmpl = _RULES[name]
+    if name in ("wk", "wv") and not pctx.divisible_by_tp(cfg.num_kv_heads):
+        tmpl = (_F, None)
+
+    if tmpl is None:
+        tmpl = (None,) * min(leaf.ndim, 1)  # norms etc: replicate
+
+    # pad leading stack dims with None
+    ndim = len(leaf.shape)
+    pad = (None,) * max(0, ndim - len(tmpl))
+    axes = []
+    for t in pad + tuple(tmpl[-ndim:] if ndim < len(tmpl) else tmpl):
+        if t == _F:
+            axes.append(pctx.fsdp_axis)
+        elif t == _M:
+            axes.append(pctx.model_axis)
+        else:
+            axes.append(None)
+
+    # never shard a dim that isn't divisible by its axis size
+    def size_of(ax):
+        if isinstance(ax, tuple):
+            n = 1
+            for a in ax:
+                n *= pctx.axis_size(a)
+            return n
+        return pctx.axis_size(ax)
+
+    final = []
+    for dim, ax in zip(leaf.shape, axes):
+        if ax is None:
+            final.append(None)
+        elif dim % max(size_of(ax), 1) == 0:
+            final.append(ax)
+        else:
+            final.append(None)
+    return P(*final)
+
+
+def param_specs(params_shape: Any, cfg: ArchConfig, pctx: ParallelCtx):
+    """Pytree of PartitionSpecs matching a params(-shape) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(path, leaf, cfg, pctx), params_shape
+    )
+
+
+def batch_spec(cfg: ArchConfig, pctx: ParallelCtx, *, seq_sharded: bool = False):
+    """PartitionSpec factory for batch-dict leaves (data inputs AND caches).
+
+    Cache leaves are recognized by name; their batch dim sits before a known
+    trailing layout: k/v [..., B, T, KV, hd], conv_* [..., B, K-1, C],
+    ssd [..., B, H, P, N], enc_out [B, T, D]. ``seq_sharded`` (long-context
+    decode, batch=1) shards the KV length dim over the data axes instead of
+    the batch dim (SP).
+    """
+    dp = pctx.dp
+    tp = pctx.tp
+
+    def guard(shape, axes_tuple):
+        """Drop shardings that don't divide the dim."""
+        out = []
+        for dim, ax in zip(shape, axes_tuple):
+            if ax is None:
+                out.append(None)
+                continue
+            if isinstance(ax, tuple):
+                size = 1
+                for a in ax:
+                    size *= pctx.axis_size(a)
+            else:
+                size = pctx.axis_size(ax)
+            out.append(ax if size and dim % size == 0 else None)
+        return P(*out)
+
+    def spec_of(path, leaf) -> P:
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+        shape = leaf.shape
+        ndim = len(shape)
+        ba = pctx.batch_axes
+        kv_ax = pctx.model_axis if pctx.divisible_by_tp(cfg.num_kv_heads) else None
+        di_ax = (
+            pctx.model_axis
+            if cfg.ssm_d_inner and cfg.ssm_d_inner % max(tp, 1) == 0
+            else None
+        )
+        h_ax = (
+            pctx.model_axis
+            if cfg.ssm_heads and cfg.ssm_heads % max(tp, 1) == 0
+            else None
+        )
+
+        if name in ("k", "v") and ndim >= 4:
+            lead = (None,) * (ndim - 4)
+            if seq_sharded:
+                return guard(shape, lead + (None, ba, kv_ax, None))
+            if kv_ax is None and tp > 1 and pctx.model_axis is not None:
+                # §Perf D1: kv_heads < tp — shard the cache LENGTH over
+                # `model` (partial-softmax decode combine) instead of
+                # replicating the whole cache across the model axis.
+                return guard(shape, lead + (ba, pctx.model_axis, None, None))
+            return guard(shape, lead + (ba, None, kv_ax, None))
+        if name == "conv_x" and ndim >= 3:
+            lead = (None,) * (ndim - 3)
+            return guard(shape, lead + (None if seq_sharded else ba, None, di_ax))
+        if name in ("conv_b", "conv_c") and ndim >= 3:
+            lead = (None,) * (ndim - 3)
+            return guard(shape, lead + (None if seq_sharded else ba, None, None))
+        if name == "ssd" and ndim >= 4:
+            lead = (None,) * (ndim - 4)
+            return guard(shape, lead + (None if seq_sharded else ba, h_ax, None, None))
+        if name == "enc_out" and ndim == 3:
+            return guard(shape, (ba, None, None))
+        # plain data leaves: batch at dim 0
+        if ndim == 0:
+            return P()
+        return guard(shape, (ba,) + (None,) * (ndim - 1))
+
+    return spec_of
+
+
+def make_train_shardings(params_shape, batch_shape, cfg: ArchConfig,
+                         pctx: ParallelCtx, *, seq_sharded: bool = False):
+    """NamedShardings for (params, batch) pytrees under pctx.mesh."""
+    assert pctx.mesh is not None
+    pspecs = param_specs(params_shape, cfg, pctx)
+    to_sh = lambda spec: NamedSharding(pctx.mesh, spec)
+    p_sh = jax.tree.map(to_sh, pspecs)
+    bs = batch_spec(cfg, pctx, seq_sharded=seq_sharded)
+    b_sh = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: to_sh(bs(path, leaf)), batch_shape
+    )
+    return p_sh, b_sh

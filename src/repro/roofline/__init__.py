@@ -1,0 +1,4 @@
+from repro.roofline.analysis import RooflineTerms, analyze_compiled, HW_V5E
+from repro.roofline.hlo_parse import collective_bytes
+
+__all__ = ["RooflineTerms", "analyze_compiled", "collective_bytes", "HW_V5E"]

@@ -1,0 +1,63 @@
+"""Parse collective traffic out of compiled/lowered HLO text.
+
+cost_analysis() has no collective-bytes entry, so we regex the module text
+for all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops and sum their payload bytes. For each op the payload is max(operand
+bytes, result bytes) — the larger side is what crosses links for
+gather/scatter-style ops; for all-reduce they're equal.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+# "op-name = <shapes> opcode(" — start/done pairs counted once via "-start".
+_OP_RE = re.compile(
+    r"=\s*(?P<lhs>[^=]*?)\s*(?P<op>"
+    + "|".join(_COLLECTIVES)
+    + r")(?P<variant>-start|-done)?\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int], Dict[str, int]]:
+    """Returns (total_bytes, bytes_by_op, count_by_op) for one device's module."""
+    by_op: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group("variant") == "-done":
+            continue  # paired with -start; count once
+        op = m.group("op")
+        # payload: larger of result-side (lhs of '=') and operand-side shapes.
+        lhs_bytes = _shape_bytes(m.group("lhs"))
+        rhs_bytes = _shape_bytes(line[m.end():])
+        by_op[op] += max(lhs_bytes, rhs_bytes)
+        counts[op] += 1
+    return sum(by_op.values()), dict(by_op), dict(counts)

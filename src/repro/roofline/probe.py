@@ -1,0 +1,108 @@
+"""Trip-count-correct roofline via layer-count probes.
+
+XLA's ``cost_analysis`` counts while-loop bodies ONCE, so scanned models
+under-report flops/bytes/collectives by ~num_layers. The probe compiles
+2-3 REDUCED-layer variants of each cell with every scan unrolled
+(``pctx.unroll_layers/unroll_attn`` python loops), fits the exact linear
+model ``cost = fixed + Σ_i n_i · unit_i``, and extrapolates to the full
+layer count. This is exact for per-layer-identical models (all of ours):
+each scanned group contributes the same ops.
+
+Probe variants per family:
+  default / gemma-pairs / ssm : k ∈ {2, 3} layer groups → (fixed, per_group)
+  hybrid (zamba2)             : (12,e6) (18,e6) (6,e3) → (fixed, shared, mamba)
+  encdec (whisper)            : enc=dec ∈ {2, 3}       → (fixed, per_enc+dec)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, get_config
+from repro.configs.shapes import SHAPES, applicable
+
+METRICS = ("flops", "bytes", "cbytes")
+
+
+def _group(cfg: ArchConfig) -> int:
+    return 2 if cfg.alternate_local_global else 1
+
+
+def probe_plan(cfg: ArchConfig) -> Tuple[List[Tuple[ArchConfig, List[float]]], List[float]]:
+    """Returns ([(variant_cfg, coeff_row)], full_coeff_row)."""
+    g = _group(cfg)
+    if cfg.family == "hybrid":
+        e = cfg.shared_attn_every
+        n_super = cfg.num_layers // e
+        tail = cfg.num_layers - n_super * e
+        variants = [
+            (dataclasses.replace(cfg, num_layers=2 * e), [1, 2, 2 * e]),
+            (dataclasses.replace(cfg, num_layers=3 * e), [1, 3, 3 * e]),
+            (dataclasses.replace(cfg, num_layers=2 * (e // 2), shared_attn_every=e // 2),
+             [1, 2, 2 * (e // 2)]),
+        ]
+        full = [1, n_super, cfg.num_layers]
+        del tail  # tail mamba layers are covered by the total layer count
+        return variants, full
+    if cfg.family == "encdec":
+        variants = [
+            (dataclasses.replace(cfg, num_layers=2 * k, enc_layers=k, dec_layers=k), [1, k])
+            for k in (2, 3)
+        ]
+        return variants, [1, cfg.enc_layers]
+    variants = [
+        (dataclasses.replace(cfg, num_layers=g * k), [1, k]) for k in (2, 3)
+    ]
+    return variants, [1, cfg.num_layers // g]
+
+
+def _extract(compiled) -> Dict[str, float]:
+    from repro.roofline.hlo_parse import collective_bytes
+
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    cb, _, _ = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "cbytes": float(cb),
+    }
+
+
+def probe_cell(arch: str, shape_name: str, multi_pod: bool = False, **kw) -> Dict:
+    """Corrected per-device (flops, bytes, collective bytes) for one cell.
+    Extra kwargs (strategy/remat/microbatches) reach lower_cell — used by
+    the §Perf hillclimb to re-measure candidate changes."""
+    import jax
+
+    from repro.launch.dryrun import lower_cell_cfg
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": reason}
+
+    variants, full = probe_plan(cfg)
+    rows, obs = [], {m: [] for m in METRICS}
+    for vcfg, coeffs in variants:
+        compiled = lower_cell_cfg(vcfg, shape_name, multi_pod, unroll=True, **kw)
+        ex = _extract(compiled)
+        rows.append(coeffs)
+        for m in METRICS:
+            obs[m].append(ex[m])
+        del compiled
+        jax.clear_caches()
+
+    a = np.array(rows, dtype=np.float64)
+    out = {"status": "ok", "variant_rows": rows, "observations": obs}
+    for m in METRICS:
+        units, *_ = np.linalg.lstsq(a, np.array(obs[m]), rcond=None)
+        units = np.maximum(units, 0.0)
+        out[m] = float(np.dot(full, units))
+        out[f"{m}_units"] = units.tolist()
+    return out

@@ -1,0 +1,109 @@
+"""Merge dryrun.json + probe.json into the EXPERIMENTS.md roofline tables.
+
+Usage:
+  PYTHONPATH=src python -m repro.roofline.report \
+      --dryrun results/dryrun.json --probe results/probe.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs.base import get_config
+from repro.configs.shapes import SHAPES
+from repro.roofline.analysis import HW_V5E, analytic_hbm_bytes, model_flops_for
+
+
+def build_rows(dryrun: dict, probe: dict):
+    rows = []
+    for key, rec in sorted(dryrun.items()):
+        arch, shape_name, mesh = key.split("|")
+        if mesh != "16x16":
+            continue  # roofline table is single-pod per the assignment
+        if rec.get("status") == "skipped":
+            rows.append({
+                "arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": rec.get("reason", ""),
+            })
+            continue
+        if rec.get("status") != "ok":
+            rows.append({"arch": arch, "shape": shape_name, "status": "error"})
+            continue
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        r = rec["roofline"]
+        p = probe.get(f"{arch}|{shape_name}", {})
+        corrected = p.get("status") == "ok"
+        flops = p["flops"] if corrected else r["flops_per_device"]
+        cbytes = p["cbytes"] if corrected else r["collective_bytes_per_device"]
+        bytes_hlo = p["bytes"] if corrected else r["bytes_per_device"]
+        bytes_analytic = analytic_hbm_bytes(cfg, shape)
+
+        t_c = flops / HW_V5E["peak_flops"]
+        t_m_hlo = bytes_hlo / HW_V5E["hbm_bw"]
+        t_m = bytes_analytic / HW_V5E["hbm_bw"]
+        t_x = cbytes / HW_V5E["ici_bw"]
+        dominant = max(
+            [("compute", t_c), ("memory", t_m), ("collective", t_x)],
+            key=lambda kv: kv[1],
+        )[0]
+        model_total = model_flops_for(cfg, shape, backward=shape.kind == "train")
+        model_dev = model_total / 256
+        step_bound = max(t_c, t_m, t_x)
+        rows.append({
+            "arch": arch, "shape": shape_name, "status": "ok",
+            "corrected": corrected,
+            "flops_dev": flops, "bytes_hlo_dev": bytes_hlo,
+            "bytes_analytic_dev": bytes_analytic, "cbytes_dev": cbytes,
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_memory_hlo_s": t_m_hlo,
+            "t_collective_s": t_x, "dominant": dominant,
+            "model_flops_dev": model_dev,
+            "useful_ratio": model_dev / flops if flops else 0.0,
+            "mfu_bound": (model_dev / HW_V5E["peak_flops"]) / step_bound
+            if step_bound else 0.0,
+            "arg_bytes": r.get("argument_bytes"),
+            "temp_bytes": r.get("temp_bytes"),
+            "collective_by_op": r.get("collective_by_op", {}),
+        })
+    return rows
+
+
+def to_markdown(rows) -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory(analytic) | t_collective | dominant "
+        "| useful(6ND/HLO) | roofline-frac (MFU bound) | corrected |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | {r['status']} "
+                f"| — | — | — |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f}s "
+            f"| {r['t_memory_s']:.4f}s | {r['t_collective_s']:.4f}s "
+            f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+            f"| {r['mfu_bound']*100:.1f}% | {'yes' if r['corrected'] else 'raw'} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--probe", default="results/probe.json")
+    ap.add_argument("--json-out", default="results/roofline.json")
+    args = ap.parse_args()
+    dryrun = json.loads(Path(args.dryrun).read_text())
+    probe = json.loads(Path(args.probe).read_text()) if Path(args.probe).exists() else {}
+    rows = build_rows(dryrun, probe)
+    Path(args.json_out).write_text(json.dumps(rows, indent=1))
+    print(to_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

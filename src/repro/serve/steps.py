@@ -1,0 +1,30 @@
+"""Serving step builders: prefill (prompt → primed caches) and decode (one
+token against a deep KV cache / SSM state)."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import Model
+from repro.parallel.ctx import ParallelCtx
+
+
+def make_prefill_step(model: Model, cfg: ArchConfig, pctx: ParallelCtx,
+                      *, max_len: int) -> Callable:
+    def prefill_step(params, batch) -> Tuple[jax.Array, Dict[str, Any]]:
+        return model.prefill(params, batch, pctx, max_len=max_len)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, cfg: ArchConfig, pctx: ParallelCtx) -> Callable:
+    def serve_step(params, caches, token, pos):
+        """One new token with the given cache; returns (logits, new caches)."""
+        return model.decode_step(
+            params, caches, {"token": token, "pos": pos}, pctx
+        )
+
+    return serve_step

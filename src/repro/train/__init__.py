@@ -1,0 +1,3 @@
+from repro.train.step import TrainState, cross_entropy, make_train_step
+
+__all__ = ["TrainState", "cross_entropy", "make_train_step"]

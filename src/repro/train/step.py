@@ -1,0 +1,131 @@
+"""Training step: loss, gradient accumulation (microbatching), optional
+error-feedback gradient compression, optimizer apply.
+
+The remat policy rides on pctx.remat (applied inside the layer scan); the
+gradient-bucket overlap factor is chosen by the paper's heuristic in
+``repro.parallel.collectives`` (see benchmarks/overlap_autotune.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import Model
+from repro.optim.adamw import Optimizer
+from repro.parallel.ctx import ParallelCtx
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array  # int32 scalar
+    ef_state: Any = None  # error-feedback buffers (optional)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL in fp32. labels < 0 are masked out."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_loss_fn(model: Model, cfg: ArchConfig, pctx: ParallelCtx,
+                 aux_coef: float = 0.01) -> Callable:
+    def loss_fn(params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, aux = model.train_logits(params, batch, pctx)
+        nll = cross_entropy(logits, batch["labels"])
+        loss = nll + aux_coef * aux
+        return loss, {"nll": nll, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(
+    model: Model,
+    cfg: ArchConfig,
+    pctx: ParallelCtx,
+    optimizer: Optimizer,
+    *,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+    aux_coef: float = 0.01,
+) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict]]:
+    loss_fn = make_loss_fn(model, cfg, pctx, aux_coef)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if compress_grads:
+        from repro.optim.grad_compress import ef_int8_compressor
+
+        _, ef_apply = ef_int8_compressor()
+
+    def compute_grads(params, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        def slice_mb(x):
+            b = x.shape[0]
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mbs = jax.tree.map(slice_mb, batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        if pctx.unroll_layers:  # roofline probe: count every microbatch
+            carry = (zero, 0.0)
+            for i in range(microbatches):
+                carry, _ = body(carry, jax.tree.map(lambda a: a[i], mbs))
+            gsum, loss_sum = carry
+        else:
+            (gsum, loss_sum), _ = jax.lax.scan(body, (zero, 0.0), mbs)
+        grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        loss = loss_sum / microbatches
+        return loss, {"nll": loss, "aux": jnp.zeros((), jnp.float32)}, grads
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        loss, metrics, grads = compute_grads(state.params, batch)
+        ef_state = state.ef_state
+        if compress_grads:
+            grads, ef_state = ef_apply(grads, state.ef_state)
+        updates, new_opt = optimizer.update(
+            grads, state.opt_state, state.params, state.step
+        )
+        new_params = jax.tree.map(
+            lambda p, u: (p + u.astype(p.dtype)), state.params, updates
+        )
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        out_metrics = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return (
+            TrainState(new_params, new_opt, state.step + 1, ef_state),
+            out_metrics,
+        )
+
+    return train_step
+
+
+def init_train_state(model: Model, cfg: ArchConfig, optimizer: Optimizer,
+                     key, *, max_dec_len: int = 4096,
+                     compress_grads: bool = False) -> TrainState:
+    params = model.init(key, max_dec_len=max_dec_len)
+    opt_state = optimizer.init(params)
+    ef_state = None
+    if compress_grads:
+        from repro.optim.grad_compress import ef_int8_compressor
+
+        ef_init, _ = ef_int8_compressor()
+        ef_state = ef_init(params)
+    return TrainState(params, opt_state, jnp.zeros((), jnp.int32), ef_state)

@@ -1,0 +1,184 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train step + one prefill→decode step on CPU; asserts shapes and finiteness."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_archs
+from repro.configs.shapes import ShapeSpec, synthesize_batch
+from repro.models.registry import build_model
+from repro.parallel.ctx import ParallelCtx
+
+ARCHS = list(list_archs())
+PCTX = ParallelCtx(mesh=None)
+
+SMOKE_TRAIN = ShapeSpec("smoke_train", seq_len=64, global_batch=2, kind="train")
+SMOKE_PREFILL = ShapeSpec("smoke_prefill", seq_len=32, global_batch=2, kind="prefill")
+
+
+def _smoke(arch):
+    cfg = get_config(arch).smoke()
+    # keep frontend smaller than seq for the concat families
+    if cfg.family in ("vlm",):
+        cfg = dataclasses.replace(cfg, frontend_tokens=16)
+    return cfg
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10, ARCHS
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    table = {
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 163_840),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 163_840),
+        "whisper-medium": (48, 1024, 16, 16, 51_865),
+        "zamba2-7b": (81, 3584, 32, 32, 32_000),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 92_416),
+        "gemma2-27b": (46, 4608, 32, 16, 256_000),
+        "qwen3-4b": (36, 2560, 32, 8, 151_936),
+        "nemotron-4-340b": (96, 18_432, 96, 8, 256_000),
+        "mamba2-1.3b": (48, 2048, 0, 0, 50_280),
+        "internvl2-2b": (24, 2048, 16, 8, 92_553),
+    }
+    layers, d, h, kv, v = table[arch]
+    assert cfg.num_layers == layers and cfg.d_model == d
+    assert cfg.num_heads == h and cfg.num_kv_heads == kv
+    assert cfg.vocab_size == v
+
+
+def test_param_counts_in_published_ballpark():
+    """Analytic param counts should land near the advertised sizes."""
+    expect = {
+        "kimi-k2-1t-a32b": (0.8e12, 1.3e12),
+        # the assignment fixes 48L (the released Moonlight-16B has 27); the
+        # analytic count for the ASSIGNED config is ~29B.
+        "moonshot-v1-16b-a3b": (25e9, 33e9),
+        "zamba2-7b": (5e9, 9e9),
+        "codeqwen1.5-7b": (6e9, 9e9),
+        "gemma2-27b": (22e9, 32e9),
+        "qwen3-4b": (3e9, 5.5e9),
+        "nemotron-4-340b": (280e9, 380e9),
+        "mamba2-1.3b": (1.0e9, 1.6e9),
+        "internvl2-2b": (1.5e9, 2.6e9),
+        "whisper-medium": (0.6e9, 0.9e9),  # whisper-medium is 769M
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]B"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_forward(arch):
+    cfg = _smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), max_dec_len=128)
+    batch = synthesize_batch(cfg, SMOKE_TRAIN, seed=1)
+    logits, aux = model.train_logits(params, batch, PCTX)
+    assert logits.shape[0] == 2
+    assert logits.shape[1] == batch["tokens"].shape[1]
+    assert logits.shape[2] >= cfg.vocab_size
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux)), f"{arch}: non-finite aux loss"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_grads_finite(arch):
+    cfg = _smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), max_dec_len=128)
+    batch = synthesize_batch(cfg, SMOKE_TRAIN, seed=2)
+
+    def loss_fn(p):
+        logits, aux = model.train_logits(p, batch, PCTX)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)
+        return -jnp.mean(ll) + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), f"{arch}: bad grads"
+    # one SGD step moves the loss
+    new_params = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype), params, grads)
+    loss2 = loss_fn(new_params)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_then_decode(arch):
+    cfg = _smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), max_dec_len=128)
+    batch = synthesize_batch(cfg, SMOKE_PREFILL, seed=3)
+    max_len = 64
+    logits, caches = model.prefill(params, batch, PCTX, max_len=max_len)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: prefill logits"
+
+    prompt_len = batch["tokens"].shape[1]
+    if cfg.family == "vlm":
+        prompt_len += cfg.frontend_tokens
+    next_tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    step = {"token": next_tok, "pos": jnp.full((2,), prompt_len, jnp.int32)}
+    logits2, caches2 = model.decode_step(params, caches, step, PCTX)
+    assert logits2.shape[:2] == (2, 1)
+    assert bool(jnp.isfinite(logits2).all()), f"{arch}: decode logits"
+    # cache trees keep structure
+    assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+
+def test_decode_matches_full_forward_dense():
+    """Teacher-forced decode must reproduce the full forward logits."""
+    cfg = _smoke("qwen3-4b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (1, 8), 0, cfg.vocab_size)
+    full_logits, _ = model.train_logits(
+        {**params}, {"tokens": tokens, "labels": tokens}, PCTX
+    )
+    # prefill first 4, then decode 4 teacher-forced steps
+    logits, caches = model.prefill(params, {"tokens": tokens[:, :4]}, PCTX, max_len=8)
+    outs = [logits[:, -1]]
+    for t in range(4, 8):
+        step = {"token": tokens[:, t : t + 1], "pos": jnp.array([t], jnp.int32)}
+        lg, caches = model.decode_step(params, caches, step, PCTX)
+        if t < 7:
+            outs.append(lg[:, 0])
+    pred = jnp.stack(outs, axis=1)  # logits for positions 3..6
+    np.testing.assert_allclose(
+        np.asarray(pred, np.float32),
+        np.asarray(full_logits[:, 3:7], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_ssm_decode_matches_scan():
+    """Mamba2: step-by-step decode must match the chunked scan output."""
+    cfg = _smoke("mamba2-1.3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (1, 16), 0, cfg.vocab_size)
+    full_logits, _ = model.train_logits(
+        params, {"tokens": tokens, "labels": tokens}, PCTX
+    )
+    logits, caches = model.prefill(params, {"tokens": tokens[:, :8]}, PCTX, max_len=16)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, -1], np.float32),
+        np.asarray(full_logits[:, 7], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+    lg = None
+    for t in range(8, 16):
+        step = {"token": tokens[:, t : t + 1], "pos": jnp.array([t], jnp.int32)}
+        lg, caches = model.decode_step(params, caches, step, PCTX)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0], np.float32),
+        np.asarray(full_logits[:, -1], np.float32),
+        rtol=3e-2, atol=3e-2,
+    )

@@ -1,0 +1,73 @@
+"""Equivalence of attention implementation paths: scanned vs unrolled flash,
+chunk sizes, windows, softcap — all must agree with a dense reference."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.layers.attention import _online_attention
+from repro.parallel.ctx import ParallelCtx
+
+
+def _dense_reference(q, k, v, q_pos, k_pos, causal, window, softcap):
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qf, kf)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = jnp.ones((q.shape[0], q.shape[1], k.shape[1]), bool)
+    if causal:
+        valid &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        valid &= q_pos[:, :, None] - k_pos[:, None, :] < window
+    s = jnp.where(valid[:, None, None], s, -2e38)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bkgqh", p, vf)
+    return jnp.moveaxis(out, 3, 1)
+
+
+@pytest.mark.parametrize("chunk", [16, 64, 100])
+@pytest.mark.parametrize("window,softcap", [(None, None), (24, None), (None, 30.0)])
+@pytest.mark.parametrize("unroll", [False, True])
+def test_flash_paths_match_dense(chunk, window, softcap, unroll):
+    key = jax.random.PRNGKey(0)
+    b, sq, t, kv, g, hd = 2, 33, 100, 2, 3, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, sq, kv, g, hd), jnp.float32) * 0.3
+    k = jax.random.normal(ks[1], (b, t, kv, hd), jnp.float32) * 0.3
+    v = jax.random.normal(ks[2], (b, t, kv, hd), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(50, 50 + sq), (b, sq))
+    k_pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+    got = _online_attention(
+        q, k, v, q_pos, k_pos,
+        causal=True, window=window, softcap=softcap, kv_chunk=chunk,
+        unroll=unroll,
+    )
+    want = _dense_reference(q, k, v, q_pos, k_pos, True, window, softcap)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+def test_unrolled_model_matches_scanned():
+    """pctx.unroll_layers must not change model outputs (probe validity)."""
+    from repro.configs.shapes import ShapeSpec, synthesize_batch
+    from repro.models.registry import build_model
+
+    cfg = get_config("gemma2-27b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = synthesize_batch(cfg, ShapeSpec("t", 64, 2, "train"), seed=1)
+    base, _ = model.train_logits(params, batch, ParallelCtx(mesh=None))
+    unrolled, _ = model.train_logits(
+        params, batch,
+        ParallelCtx(mesh=None, unroll_layers=True, unroll_attn=True),
+    )
+    np.testing.assert_allclose(
+        np.asarray(base, np.float32), np.asarray(unrolled, np.float32),
+        rtol=1e-4, atol=1e-4,
+    )

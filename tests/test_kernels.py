@@ -1,0 +1,101 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles.
+
+Every kernel is swept over shapes and dtypes and compared with
+assert_allclose against its ref.py oracle, per the kernel contract.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.tridiag import ensure_x64
+
+ensure_x64()
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.tridiag.reference import make_diag_dominant_system  # noqa: E402
+from repro.kernels.common import assert_allclose_by_dtype  # noqa: E402
+from repro.kernels.thomas.ops import thomas_pallas  # noqa: E402
+from repro.kernels.thomas.ref import thomas_ref  # noqa: E402
+from repro.kernels.partition_stage1.ops import partition_stage1_pallas  # noqa: E402
+from repro.kernels.partition_stage1.ref import stage1_ref  # noqa: E402
+from repro.kernels.partition_stage3.ops import (  # noqa: E402
+    partition_solve_pallas,
+    partition_stage3_pallas,
+)
+from repro.kernels.partition_stage3.ref import stage3_ref  # noqa: E402
+from repro.core.tridiag.partition import partition_stage2  # noqa: E402
+from repro.kernels.tridiag_matvec.ops import tridiag_matvec_pallas  # noqa: E402
+from repro.kernels.tridiag_matvec.ref import tridiag_matvec_ref  # noqa: E402
+
+DTYPES = [np.float32, np.float64]
+
+
+# ----------------------------------------------------------------- thomas ---
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("bsz,n", [(1, 8), (3, 17), (64, 10), (130, 33), (256, 9)])
+def test_thomas_kernel_sweep(bsz, n, dtype):
+    dl, d, du, b, _ = make_diag_dominant_system(n, seed=bsz * n, batch=(bsz,), dtype=dtype)
+    got = thomas_pallas(dl, d, du, b, block_b=128)
+    want = thomas_ref(*map(jnp.asarray, (dl, d, du, b)))
+    assert got.shape == (bsz, n)
+    assert got.dtype == np.dtype(dtype)
+    assert_allclose_by_dtype(got, want, dtype)
+
+
+def test_thomas_kernel_1d_api():
+    dl, d, du, b, _ = make_diag_dominant_system(31, seed=5)
+    got = thomas_pallas(dl, d, du, b)
+    assert got.shape == (31,)
+    assert_allclose_by_dtype(got, thomas_ref(*map(jnp.asarray, (dl, d, du, b))), np.float64)
+
+
+# ----------------------------------------------------------------- stage1 ---
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("p,m", [(4, 10), (100, 10), (129, 10), (7, 2), (33, 5), (512, 4)])
+def test_stage1_kernel_sweep(p, m, dtype):
+    n = p * m
+    dl, d, du, b, _ = make_diag_dominant_system(n, seed=p + m, dtype=dtype)
+    args = tuple(map(jnp.asarray, (dl, d, du, b)))
+    got = partition_stage1_pallas(*args, m=m, block_p=128)
+    want = stage1_ref(*args, m=m)
+    for g, w in zip(got, want):
+        assert_allclose_by_dtype(g, w, dtype)
+
+
+# ----------------------------------------------------------------- stage3 ---
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("p,m", [(4, 10), (100, 10), (129, 3), (260, 7)])
+def test_stage3_kernel_sweep(p, m, dtype):
+    n = p * m
+    dl, d, du, b, _ = make_diag_dominant_system(n, seed=p * m, dtype=dtype)
+    args = tuple(map(jnp.asarray, (dl, d, du, b)))
+    coeffs = stage1_ref(*args, m=m)
+    s = partition_stage2(coeffs)
+    got = partition_stage3_pallas(coeffs, s, block_p=128)
+    want = stage3_ref(coeffs, s)
+    assert got.shape == (n,)
+    assert_allclose_by_dtype(got, want, dtype)
+
+
+# ------------------------------------------------------------- end-to-end ---
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_partition_solve_pallas_end_to_end(dtype):
+    n, m = 1000, 10
+    dl, d, du, b, x_true = make_diag_dominant_system(n, seed=42, dtype=dtype)
+    x = partition_solve_pallas(*map(jnp.asarray, (dl, d, du, b)), m=m)
+    tol = 1e-8 if dtype == np.float64 else 2e-3
+    assert float(jnp.max(jnp.abs(x - jnp.asarray(x_true)))) < tol
+
+
+# ----------------------------------------------------------------- matvec ---
+@pytest.mark.parametrize("dtype", DTYPES + [jnp.bfloat16])
+@pytest.mark.parametrize("n", [5, 128, 1000, 8192 + 3])
+def test_matvec_kernel_sweep(n, dtype):
+    npdtype = np.float32 if dtype == jnp.bfloat16 else dtype
+    dl, d, du, _, x = make_diag_dominant_system(n, seed=n, dtype=npdtype)
+    args = tuple(jnp.asarray(a, dtype=dtype) for a in (dl, d, du, x))
+    got = tridiag_matvec_pallas(*args)
+    want = tridiag_matvec_ref(*args)
+    assert got.shape == (n,)
+    assert_allclose_by_dtype(got, want, dtype)

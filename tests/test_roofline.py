@@ -1,0 +1,140 @@
+"""Unit tests for the roofline machinery: HLO collective parsing, probe
+plans, analytic memory model, the SSD chunk tuner, and report assembly."""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.configs.shapes import SHAPES
+from repro.core.autotune.overlap import tune_ssm_chunk
+from repro.roofline.analysis import (
+    HW_V5E,
+    analyze_compiled,
+    analytic_hbm_bytes,
+    model_flops_for,
+)
+from repro.roofline.hlo_parse import collective_bytes
+from repro.roofline.probe import probe_plan
+
+HLO = """
+HloModule test
+fused_computation {
+  ...
+}
+ENTRY main {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ag = bf16[2048,256]{1,0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%y), dimensions={0}
+  %a2a = bf16[32,32]{1,0} all-to-all(%z), dimensions={0}
+  %cp = s32[16]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ars = f32[8]{0} all-reduce-start(%q), to_apply=%add
+  %ard = f32[8]{0} all-reduce-done(%ars)
+}
+"""
+
+
+def test_collective_bytes_parses_all_ops():
+    total, by_op, counts = collective_bytes(HLO)
+    assert counts["all-gather"] == 1
+    assert counts["all-reduce"] == 2  # plain + -start (done not re-counted)
+    assert counts["reduce-scatter"] == 1
+    assert counts["all-to-all"] == 1
+    assert counts["collective-permute"] == 1
+    assert by_op["all-gather"] == 2048 * 256 * 2  # result side (bigger)
+    assert by_op["all-reduce"] == 1024 * 4 + 8 * 4
+    assert total == sum(by_op.values())
+
+
+def test_collective_bytes_empty():
+    assert collective_bytes("ENTRY main { %r = f32[2] add(%a, %b) }")[0] == 0
+
+
+# ------------------------------------------------------------------ probes --
+def test_probe_plan_dense():
+    cfg = get_config("qwen3-4b")
+    variants, full = probe_plan(cfg)
+    assert [v[1] for v in variants] == [[1, 2], [1, 3]]
+    assert full == [1, 36]
+    assert variants[0][0].num_layers == 2
+
+
+def test_probe_plan_gemma_pairs():
+    cfg = get_config("gemma2-27b")
+    variants, full = probe_plan(cfg)
+    assert variants[0][0].num_layers == 4  # 2 groups of (local, global)
+    assert full == [1, 23]
+
+
+def test_probe_plan_hybrid_three_unknowns():
+    cfg = get_config("zamba2-7b")
+    variants, full = probe_plan(cfg)
+    assert len(variants) == 3
+    rows = np.array([v[1] for v in variants], dtype=float)
+    assert np.linalg.matrix_rank(rows) == 3  # identifiable
+    assert full == [1, 13, 81]
+
+
+def test_probe_plan_encdec():
+    cfg = get_config("whisper-medium")
+    variants, full = probe_plan(cfg)
+    assert variants[0][0].enc_layers == 2
+    assert full == [1, 24]
+
+
+# ------------------------------------------------------- analytic memory ----
+def test_analytic_hbm_train_scale_sane():
+    cfg = get_config("qwen3-4b")
+    b = analytic_hbm_bytes(cfg, SHAPES["train_4k"])
+    # O(100 GB)/device/step: weights (3 passes / tp) + activations + optimizer
+    assert 2e10 < b < 1e12
+
+
+def test_analytic_hbm_decode_dominated_by_cache():
+    cfg = get_config("nemotron-4-340b")
+    b = analytic_hbm_bytes(cfg, SHAPES["decode_32k"])
+    kv = SHAPES["decode_32k"].global_batch * 32768 * 8 * 192 * 2 * 2 * 96 / 256
+    assert b > kv * 0.5
+
+
+def test_model_flops_conventions():
+    cfg = get_config("qwen3-4b")
+    t = model_flops_for(cfg, SHAPES["train_4k"], backward=True)
+    p = model_flops_for(cfg, SHAPES["prefill_32k"], backward=False)
+    assert t == pytest.approx(6 * cfg.active_param_count() * 256 * 4096)
+    assert p == pytest.approx(2 * cfg.active_param_count() * 32 * 32768)
+    moe = get_config("kimi-k2-1t-a32b")
+    assert moe.active_param_count() < 0.1 * moe.param_count()
+
+
+# ------------------------------------------------------------- compiled ----
+def test_analyze_compiled_on_tiny_program():
+    import jax
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda a, b: a @ b)
+    compiled = f.lower(
+        jnp.zeros((128, 128)), jnp.zeros((128, 128))
+    ).compile()
+    terms = analyze_compiled(compiled, model_flops_total=2 * 128**3, n_devices=1)
+    assert terms.flops_per_device == pytest.approx(2 * 128**3, rel=0.01)
+    assert terms.dominant in ("compute", "memory", "collective")
+    assert terms.useful_ratio == pytest.approx(1.0, rel=0.05)
+
+
+# ------------------------------------------------------------- ssm tuner ----
+def test_tune_ssm_chunk_balances_quadratic_vs_recurrence():
+    q_small_seq, _ = tune_ssm_chunk(
+        seq_len=4096, d_inner=4096, ssm_state=128, head_dim=64
+    )
+    assert q_small_seq in (64, 128, 256, 512, 1024)
+    # slower recurrence step -> bigger chunks preferred
+    q_slow, _ = tune_ssm_chunk(
+        seq_len=4096, d_inner=4096, ssm_state=128, head_dim=64,
+        recurrence_step_latency_s=1e-4,
+    )
+    q_fast, _ = tune_ssm_chunk(
+        seq_len=4096, d_inner=4096, ssm_state=128, head_dim=64,
+        recurrence_step_latency_s=1e-8,
+    )
+    assert q_slow >= q_fast

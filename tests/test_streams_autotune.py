@@ -1,0 +1,268 @@
+"""Tests for the stream time model, the calibrated simulator, and the ML
+heuristic pipeline — including end-to-end reproduction of the paper's tables."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.autotune.curvefit import curve_fit, lm_fit
+from repro.core.autotune.heuristic import (
+    GOMEZ_LUNA_TAU_MS,
+    fit_stream_heuristic,
+    gomez_luna_optimum,
+)
+from repro.core.autotune.linreg import LinearModel, mse, r2_score, train_test_split
+from repro.core.autotune.overlap import (
+    OverlapSpec,
+    tune_gradient_buckets,
+    tune_overlap_granularity,
+    tune_prefetch_chunks,
+)
+from repro.core.streams import (
+    PAPER_SIZES,
+    RTX_A5000,
+    STREAM_CANDIDATES,
+    StageTimes,
+    StreamSimulator,
+)
+from repro.core.streams.timemodel import (
+    gain,
+    overhead_from_measurement,
+    select_optimum,
+    sum_overlap,
+    t_non_str,
+    t_str_model,
+)
+
+# Paper Table 4: size -> actual optimum number of streams (FP64, 2080 Ti).
+TABLE4 = {
+    1_000: 1, 4_000: 1, 5_000: 1, 8_000: 1, 10_000: 1, 40_000: 1, 50_000: 1,
+    80_000: 1, 100_000: 1, 400_000: 4, 500_000: 8, 800_000: 8, 1_000_000: 8,
+    2_500_000: 16, 4_000_000: 32, 5_000_000: 32, 7_500_000: 32, 8_000_000: 32,
+    10_000_000: 32, 25_000_000: 32, 40_000_000: 32, 50_000_000: 32,
+    75_000_000: 32, 80_000_000: 32, 100_000_000: 32,
+}
+
+
+# ------------------------------------------------------------- time model ---
+def test_eq1_eq2_eq3_eq5_consistency():
+    st_ = StageTimes(1.0, 0.5, 0.2, 0.7, 0.1, 0.3, 0.4)
+    assert t_non_str(st_) == pytest.approx(3.2)
+    assert sum_overlap(st_) == pytest.approx(1.1)
+    # Eq. 5 must invert Eq. 2: extract exactly the overhead we injected.
+    for n in (2, 4, 8, 16, 32):
+        ts = t_str_model(st_, n, t_overhead=0.123)
+        ov = overhead_from_measurement(ts, t_non_str(st_), sum_overlap(st_), n)
+        assert ov == pytest.approx(0.123, abs=1e-12)
+
+
+def test_select_optimum_prefers_biggest_positive_margin():
+    s = 2.0
+    overheads = [(2, 0.5), (4, 0.6), (8, 0.9), (16, 1.6), (32, 2.2)]
+    # margins: 0.5, 0.9, 0.85, 0.275, -0.2625 -> best at 4
+    assert select_optimum(s, overheads) == 4
+    # all overheads too big -> 1
+    assert select_optimum(0.1, [(k, 1.0) for k in (2, 4, 8, 16, 32)]) == 1
+
+
+# ---------------------------------------------------------------- simulator --
+def test_simulator_reproduces_table4_actual_optima():
+    sim = StreamSimulator()
+    for n, expected in TABLE4.items():
+        assert sim.actual_optimum(n) == expected, f"size {n}"
+
+
+def test_simulator_matches_table1_anchors():
+    sim = StreamSimulator()
+    st_ = sim.components(4_000_000)
+    assert st_.t1_comp == pytest.approx(1.993980, rel=1e-6)
+    assert st_.t1_d2h == pytest.approx(3.897410, rel=1e-6)
+    assert st_.t3_h2d == pytest.approx(0.975392, rel=1e-6)
+    assert st_.t3_comp == pytest.approx(2.130500, rel=1e-6)
+
+
+def test_simulator_sum_tracks_eq4_line():
+    """Eq. 4 is the regression over the whole campaign: it tracks tightly at
+    large sizes (slope-dominated) and underestimates small ones — the paper's
+    own Table 1 shows measured sum at 4e4 (0.327) ≈ 39% above the line."""
+    sim = StreamSimulator()
+    for n in (1e6, 4e6, 1e7, 1e8):
+        s = sum_overlap(sim.components(int(n)))
+        line = 2.1890017149e-6 * n + 0.1470644998564126
+        assert s == pytest.approx(line, rel=0.12), n
+
+
+def test_simulator_noise_deterministic_and_small():
+    sim = StreamSimulator(seed=7)
+    a = sim.measure_t_str(1_000_000, 8, rep=0)
+    b = sim.measure_t_str(1_000_000, 8, rep=0)
+    assert a == b
+    assert a == pytest.approx(sim.t_str_true(1_000_000, 8), rel=0.1)
+
+
+def test_simulator_a5000_heuristic_invariance():
+    """Paper §3.1: the actual optima are preserved across the two cards."""
+    ti = StreamSimulator()
+    a5000 = StreamSimulator(gpu=RTX_A5000)
+    for n in PAPER_SIZES:
+        assert ti.actual_optimum(n) == a5000.actual_optimum(n), n
+
+
+def test_simulator_fp32_optima_never_bigger_and_often_half():
+    """Paper §3.2/Table 5: FP32 optimum is the FP64 one or half of it."""
+    f64 = StreamSimulator(precision="fp64")
+    f32 = StreamSimulator(precision="fp32")
+    halves = same = 0
+    for n in PAPER_SIZES:
+        o64, o32 = f64.actual_optimum(n), f32.actual_optimum(n)
+        assert o32 <= o64, (n, o32, o64)
+        if o32 == o64:
+            same += 1
+        elif o32 * 2 == o64:
+            halves += 1
+    assert same + halves == len(PAPER_SIZES)  # never "other", never bigger
+    assert halves >= 2  # the halving effect is visible
+
+
+# ------------------------------------------------------------------ linreg ---
+def test_linreg_exact_on_line():
+    x = np.linspace(0, 10, 50)
+    y = 3.5 * x - 2.0
+    m = LinearModel.fit(x, y)
+    assert m.coef[0] == pytest.approx(3.5)
+    assert m.intercept == pytest.approx(-2.0)
+    assert r2_score(y, m.predict(x)) == pytest.approx(1.0)
+
+
+def test_train_test_split_shapes_and_determinism():
+    x = np.arange(100)
+    y = x * 2
+    x_tr, x_te, y_tr, y_te = train_test_split(x, y, test_size=0.25, seed=3)
+    assert len(x_te) == 25 and len(x_tr) == 75
+    assert set(x_tr) | set(x_te) == set(x)
+    np.testing.assert_array_equal(y_tr, x_tr * 2)
+    x_tr2, *_ = train_test_split(x, y, test_size=0.25, seed=3)
+    np.testing.assert_array_equal(x_tr, x_tr2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    a=st.floats(-5, 5), b=st.floats(-5, 5),
+    seed=st.integers(0, 10_000),
+)
+def test_property_linreg_recovers_noiseless_line(a, b, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-10, 10, size=30)
+    y = a * x + b
+    m = LinearModel.fit(x, y)
+    assert np.allclose(m.predict(x), y, atol=1e-6 + 1e-6 * abs(a) * 10)
+
+
+# ---------------------------------------------------------------- curvefit ---
+def test_lm_fit_matches_scipy_curve_fit():
+    def f(x, p, q, r):
+        return p * np.exp(-x / q) + r
+
+    x = np.linspace(0.1, 10, 60)
+    true = (2.0, 3.0, 0.5)
+    y = f(x, *true)
+    p_scipy = curve_fit(f, x, y, (1.0, 1.0, 0.0), use_scipy=True)
+    p_lm = lm_fit(f, x, y, (1.0, 1.0, 0.0))
+    np.testing.assert_allclose(p_scipy, true, rtol=1e-4)
+    np.testing.assert_allclose(p_lm, true, rtol=1e-3)
+
+
+# ------------------------------------------------- end-to-end ML heuristic ---
+@pytest.fixture(scope="module")
+def fitted_heuristic():
+    sim = StreamSimulator(seed=1)
+    data = sim.dataset(reps=2)
+    return sim, fit_stream_heuristic(data)
+
+
+def test_heuristic_sum_model_close_to_paper_eq4(fitted_heuristic):
+    _, h = fitted_heuristic
+    slope, intercept = h.sum_model.coef[0], h.sum_model.intercept
+    assert slope == pytest.approx(2.1890017149e-6, rel=0.05)
+    assert abs(intercept) < 0.4
+    assert h.metrics["sum_train"]["r2"] > 0.999
+    assert h.metrics["sum_test"]["r2"] > 0.999
+
+
+def test_heuristic_overhead_models_fit_well(fitted_heuristic):
+    _, h = fitted_heuristic
+    for tag in ("ov_small", "ov_big"):
+        assert h.metrics[f"{tag}_train"]["r2"] > 0.9, h.metrics
+        assert h.metrics[f"{tag}_test"]["r2"] > 0.85, h.metrics
+
+
+def test_heuristic_predictions_match_table4_within_paper_tolerance(fitted_heuristic):
+    """The paper itself mispredicts 2 of 25 sizes (by one power of two, with
+    negligible time impact). Hold our pipeline to the same standard."""
+    sim, h = fitted_heuristic
+    wrong = []
+    for n in PAPER_SIZES:
+        pred, act = h.predict_optimum(n), TABLE4[n]
+        if pred != act:
+            wrong.append((n, pred, act))
+            # any miss must be a single power-of-two step...
+            assert pred in (act * 2, max(1, act // 2)), (n, pred, act)
+            # ...with negligible true-time impact (<2%), like the paper's.
+            t_pred, t_act = sim.t_str_true(n, pred), sim.t_str_true(n, act)
+            assert abs(t_pred - t_act) / t_act < 0.02
+    assert len(wrong) <= 3, wrong
+
+
+def test_gomez_luna_baseline_reproduces_table1_column():
+    sums = {4e3: 0.273440, 4e4: 0.327424, 4e5: 1.104320,
+            4e6: 8.997282, 4e7: 86.876620}
+    expected = {4e3: 7.8, 4e4: 8.6, 4e5: 15.8, 4e6: 45.0, 4e7: 139.8}
+    for n, s in sums.items():
+        assert gomez_luna_optimum(s) == pytest.approx(expected[n], abs=0.05)
+
+
+def test_gomez_luna_overpredicts_vs_actual():
+    """The paper's point: [6] predicts ≫ the empirical optimum."""
+    sim = StreamSimulator()
+    for n in (4_000, 400_000, 40_000_000):
+        s = sum_overlap(sim.components(n))
+        assert gomez_luna_optimum(s) > sim.actual_optimum(n)
+
+
+# ------------------------------------------------------- generalized tuner ---
+def test_overlap_spec_monotone_overhead():
+    spec = OverlapSpec(sum_overlappable_s=1e-3, per_chunk_latency_s=1e-5)
+    ovs = [spec.overhead(n) for n in (2, 4, 8, 16, 32)]
+    assert all(b > a for a, b in zip(ovs, ovs[1:]))
+
+
+def test_tune_overlap_granularity_tradeoff():
+    # Big overlappable, tiny latency -> many chunks; huge latency -> 1.
+    n_many, _ = tune_overlap_granularity(
+        OverlapSpec(sum_overlappable_s=0.1, per_chunk_latency_s=1e-6)
+    )
+    n_one, _ = tune_overlap_granularity(
+        OverlapSpec(sum_overlappable_s=1e-5, per_chunk_latency_s=1e-2)
+    )
+    assert n_many >= 32
+    assert n_one == 1
+
+
+def test_tune_gradient_buckets_reasonable():
+    # 1 GB of grads over 50 GB/s with a 10 ms backward: comm 20 ms, fully
+    # overlappable; 15 us per collective.
+    n, margin = tune_gradient_buckets(
+        grad_bytes=1e9, link_bandwidth_Bps=50e9, backward_compute_s=10e-3
+    )
+    assert n >= 8
+    assert margin > 0
+
+
+def test_tune_prefetch_chunks_small_batch_prefers_one():
+    n, _ = tune_prefetch_chunks(
+        batch_bytes=64 * 1024, host_link_Bps=10e9, step_compute_s=1e-3,
+        per_transfer_latency_s=1e-3,
+    )
+    assert n == 1

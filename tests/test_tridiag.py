@@ -1,0 +1,133 @@
+"""Unit + property tests for the Thomas and partition tridiagonal solvers."""
+
+import numpy as np
+import pytest
+
+from repro.core.tridiag import ensure_x64
+
+ensure_x64()
+
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.tridiag import (  # noqa: E402
+    ChunkedPartitionSolver,
+    make_diag_dominant_system,
+    partition_solve,
+    partition_stage1,
+    partition_stage2,
+    thomas,
+    thomas_numpy,
+    tridiag_matvec,
+    tridiag_to_dense,
+)
+
+
+def _rel_err(x, ref):
+    return np.max(np.abs(x - ref)) / (np.max(np.abs(ref)) + 1e-30)
+
+
+# ---------------------------------------------------------------- Thomas ----
+@pytest.mark.parametrize("n", [1, 2, 3, 10, 97, 1000])
+def test_thomas_matches_numpy(n):
+    dl, d, du, b, x_true = make_diag_dominant_system(n, seed=n)
+    x = np.asarray(thomas(jnp.asarray(dl), jnp.asarray(d), jnp.asarray(du), jnp.asarray(b)))
+    assert _rel_err(x, thomas_numpy(dl, d, du, b)) < 1e-12
+    assert _rel_err(x, x_true) < 1e-9
+
+
+def test_thomas_vs_dense_solve():
+    dl, d, du, b, _ = make_diag_dominant_system(64, seed=7)
+    x_dense = np.linalg.solve(tridiag_to_dense(dl, d, du), b)
+    x = np.asarray(thomas(*map(jnp.asarray, (dl, d, du, b))))
+    assert _rel_err(x, x_dense) < 1e-12
+
+
+def test_thomas_batched_and_multirhs():
+    dl, d, du, b, _ = make_diag_dominant_system(40, seed=3, batch=(5,))
+    x = np.asarray(thomas(*map(jnp.asarray, (dl, d, du, b))))
+    for i in range(5):
+        assert _rel_err(x[i], thomas_numpy(dl[i], d[i], du[i], b[i])) < 1e-12
+    # multi-RHS: trailing axis
+    rhs = np.stack([b, 2 * b, -b], axis=-1)
+    xm = np.asarray(thomas(*map(jnp.asarray, (dl, d, du)), jnp.asarray(rhs)))
+    assert _rel_err(xm[..., 0], x) < 1e-12
+    assert _rel_err(xm[..., 1], 2 * x) < 1e-12
+
+
+def test_thomas_fp32_reasonable():
+    dl, d, du, b, x_true = make_diag_dominant_system(256, seed=11, dtype=np.float32)
+    x = np.asarray(thomas(*map(jnp.asarray, (dl, d, du, b))))
+    assert x.dtype == np.float32
+    assert _rel_err(x, x_true) < 1e-4
+
+
+# ------------------------------------------------------------- partition ----
+@pytest.mark.parametrize("n,m", [(20, 10), (100, 10), (64, 2), (60, 3), (1000, 10), (96, 8)])
+def test_partition_matches_thomas(n, m):
+    dl, d, du, b, x_true = make_diag_dominant_system(n, seed=n + m)
+    args = tuple(map(jnp.asarray, (dl, d, du, b)))
+    x = np.asarray(partition_solve(*args, m=m))
+    assert _rel_err(x, thomas_numpy(dl, d, du, b)) < 1e-11
+    assert _rel_err(x, x_true) < 1e-8
+
+
+def test_partition_batched():
+    dl, d, du, b, _ = make_diag_dominant_system(120, seed=5, batch=(4,))
+    x = np.asarray(partition_solve(*map(jnp.asarray, (dl, d, du, b)), m=10))
+    ref = thomas_numpy(dl, d, du, b)
+    assert _rel_err(x, ref) < 1e-11
+
+
+def test_partition_reduced_system_is_consistent():
+    """Stage-2 unknowns must equal the true solution at block boundaries."""
+    n, m = 200, 10
+    dl, d, du, b, _ = make_diag_dominant_system(n, seed=2)
+    coeffs = partition_stage1(*map(jnp.asarray, (dl, d, du, b)), m=m)
+    s = np.asarray(partition_stage2(coeffs))
+    x_ref = thomas_numpy(dl, d, du, b)
+    np.testing.assert_allclose(s, x_ref[m - 1 :: m], rtol=1e-10, atol=1e-12)
+
+
+def test_partition_m_must_divide():
+    dl, d, du, b, _ = make_diag_dominant_system(20, seed=0)
+    with pytest.raises(AssertionError):
+        partition_solve(*map(jnp.asarray, (dl, d, du, b)), m=7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(min_value=2, max_value=40),
+    m=st.integers(min_value=2, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    dominance=st.floats(min_value=1.5, max_value=10.0),
+)
+def test_property_partition_residual_small(p, m, seed, dominance):
+    """For any diagonally dominant system, the residual is tiny and the
+    partition solution agrees with Thomas (algorithm-equivalence invariant)."""
+    n = p * m
+    dl, d, du, b, _ = make_diag_dominant_system(n, seed=seed, dominance=dominance)
+    x = np.asarray(partition_solve(*map(jnp.asarray, (dl, d, du, b)), m=m))
+    r = tridiag_matvec(dl, d, du, x) - b
+    scale = np.max(np.abs(b)) + 1.0
+    assert np.max(np.abs(r)) / scale < 1e-9
+    assert _rel_err(x, thomas_numpy(dl, d, du, b)) < 1e-8
+
+
+# ---------------------------------------------------------------- chunked ----
+@pytest.mark.parametrize("num_chunks", [1, 2, 3, 8, 32])
+def test_chunked_solver_matches_reference(num_chunks):
+    n = 400
+    dl, d, du, b, _ = make_diag_dominant_system(n, seed=num_chunks)
+    solver = ChunkedPartitionSolver(m=10, num_chunks=num_chunks)
+    x, timing = solver.solve_timed(dl, d, du, b)
+    assert _rel_err(x, thomas_numpy(dl, d, du, b)) < 1e-11
+    assert timing.num_chunks == min(num_chunks, n // 10)
+    assert timing.t_total_ms > 0
+
+
+def test_chunked_more_chunks_than_blocks():
+    n = 30  # 3 blocks, ask for 8 chunks
+    dl, d, du, b, _ = make_diag_dominant_system(n, seed=1)
+    x = ChunkedPartitionSolver(m=10, num_chunks=8).solve(dl, d, du, b)
+    assert _rel_err(x, thomas_numpy(dl, d, du, b)) < 1e-11
