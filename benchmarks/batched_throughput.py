@@ -1,0 +1,62 @@
+"""Batched multi-SLAE throughput: systems/sec vs (size, batch, num_chunks).
+
+The batching lever of Gloster et al. / Carroll et al. (PAPERS.md) applied to
+the partition pipeline: a batch of B size-n systems fuses into one B·n solve
+(`repro.core.tridiag.batched`), so throughput should grow with B until the
+machine saturates, and the best chunk count should track the (size × batch)
+heuristic rather than the single-system one.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run --only batched_throughput
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.autotune.heuristic import fit_batched_stream_heuristic
+from repro.core.streams.simulator import StreamSimulator
+from repro.core.tridiag.batched import BatchedPartitionSolver
+from repro.core.tridiag.reference import make_diag_dominant_system
+
+
+def batched_throughput(
+    sizes=(20_000, 100_000),
+    batches=(1, 4, 16),
+    chunk_counts=(1, 2, 4, 8),
+    *,
+    m: int = 10,
+    reps: int = 3,
+):
+    """systems/sec per (size, batch, num_chunks) cell + the heuristic's pick.
+
+    The heuristic column is fitted on the calibrated simulator's batched
+    campaign (this container has no GPU); on real hardware swap in
+    ``measure_batched_dataset`` for an apples-to-apples tune.
+    """
+    sim = StreamSimulator(seed=1)
+    heur = fit_batched_stream_heuristic(
+        sim.dataset(sizes=sizes, batches=tuple(batches), reps=2)
+    )
+    header = ["size", "batch", "num_chunks", "ms_per_batch", "systems_per_sec",
+              "heuristic_pick"]
+    rows = []
+    for n in sizes:
+        for batch in batches:
+            dl, d, du, b, _ = make_diag_dominant_system(n, seed=0, batch=(batch,))
+            pick = heur.predict_optimum(n, batch)
+            for k in chunk_counts:
+                solver = BatchedPartitionSolver(m=m, num_chunks=k)
+                solver.solve(dl, d, du, b)  # warm the jit caches
+                best = np.inf
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    solver.solve(dl, d, du, b)
+                    best = min(best, time.perf_counter() - t0)
+                rows.append([
+                    n, batch, k, round(best * 1e3, 3),
+                    round(batch / best, 1), pick,
+                ])
+    return header, rows

@@ -16,7 +16,9 @@
 from repro.core.autotune.linreg import LinearModel, train_test_split, r2_score, mse
 from repro.core.autotune.heuristic import (
     GOMEZ_LUNA_TAU_MS,
+    BatchedStreamHeuristic,
     StreamHeuristic,
+    fit_batched_stream_heuristic,
     fit_stream_heuristic,
     gomez_luna_optimum,
 )
@@ -28,7 +30,9 @@ __all__ = [
     "r2_score",
     "mse",
     "StreamHeuristic",
+    "BatchedStreamHeuristic",
     "fit_stream_heuristic",
+    "fit_batched_stream_heuristic",
     "gomez_luna_optimum",
     "GOMEZ_LUNA_TAU_MS",
     "OverlapSpec",

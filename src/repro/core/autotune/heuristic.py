@@ -37,11 +37,16 @@ def gomez_luna_optimum(sum_ms: float, tau_ms: float = GOMEZ_LUNA_TAU_MS) -> floa
 
 @dataclass
 class StreamHeuristic:
-    """Fitted sum + overhead models and the Eq. 6 selection rule."""
+    """Fitted sum + overhead models and the Eq. 6 selection rule.
+
+    A regime's ``popt`` is None when the campaign had no rows on its side of
+    the small/big split (e.g. a small-size-only sweep); prediction then falls
+    back to the populated regime's model everywhere.
+    """
 
     sum_model: LinearModel
-    popt_small: np.ndarray
-    popt_big: np.ndarray
+    popt_small: Optional[np.ndarray]
+    popt_big: Optional[np.ndarray]
     split_size: float = M.SMALL_BIG_SPLIT
     candidates: Tuple[int, ...] = STREAM_CANDIDATES
     metrics: Dict[str, Dict[str, float]] = field(default_factory=dict)
@@ -53,6 +58,10 @@ class StreamHeuristic:
     def predict_overhead(self, size, num_str) -> np.ndarray:
         size = np.atleast_1d(np.asarray(size, dtype=np.float64))
         num_str = np.broadcast_to(np.asarray(num_str, dtype=np.float64), size.shape)
+        if self.popt_small is None:
+            return M.overhead_big((size, num_str), *self.popt_big)
+        if self.popt_big is None:
+            return M.overhead_small((size, num_str), *self.popt_small)
         small = M.overhead_small((size, num_str), *self.popt_small)
         big = M.overhead_big((size, num_str), *self.popt_big)
         return np.where(size <= self.split_size, small, big)
@@ -70,6 +79,54 @@ class StreamHeuristic:
     def predict_optimum_fp32(self, size: float) -> int:
         """Paper §3.2 recommendation: halve the FP64 optimum for FP32."""
         return max(1, self.predict_optimum(size) // 2)
+
+
+@dataclass
+class BatchedStreamHeuristic:
+    """Eq. 4–7 pipeline extended to the 2-D (size, batch) grid.
+
+    A fused batch of B size-n systems (`repro.core.tridiag.batched`) presents
+    the GPU with one n·B-element solve, so the fitted models take the
+    *effective* size n·B as their size feature; the selection rule (Eq. 6) is
+    unchanged. Fit with :func:`fit_batched_stream_heuristic` on a campaign
+    that sweeps ``batches`` (``StreamSimulator.dataset(..., batches=...)`` or
+    ``repro.core.streams.measure.measure_batched_dataset``).
+    """
+
+    base: StreamHeuristic
+
+    @property
+    def metrics(self) -> Dict[str, Dict[str, float]]:
+        return self.base.metrics
+
+    def predict_sum(self, size, batch=1) -> np.ndarray:
+        return self.base.predict_sum(np.asarray(size, np.float64) * batch)
+
+    def predict_overhead(self, size, num_str, batch=1) -> np.ndarray:
+        return self.base.predict_overhead(
+            np.asarray(size, np.float64) * batch, num_str
+        )
+
+    def predict_optimum(self, size: float, batch: int = 1) -> int:
+        return self.base.predict_optimum(float(size) * batch)
+
+    def predict_optimum_fp32(self, size: float, batch: int = 1) -> int:
+        return max(1, self.predict_optimum(size, batch) // 2)
+
+
+def fit_batched_stream_heuristic(
+    data: StreamDataset,
+    *,
+    split_seed: int = 0,
+    test_size: float = 0.25,
+    candidates: Sequence[int] = STREAM_CANDIDATES,
+) -> BatchedStreamHeuristic:
+    """Fit the (size × batch) heuristic: the paper's pipeline on a batched
+    campaign, with every row's size feature being its effective n·batch."""
+    base = fit_stream_heuristic(
+        data, split_seed=split_seed, test_size=test_size, candidates=candidates
+    )
+    return BatchedStreamHeuristic(base=base)
 
 
 def fit_stream_heuristic(
@@ -92,8 +149,14 @@ def fit_stream_heuristic(
     metrics["sum_test"] = sum_model.metrics(x_te, y_te)
 
     # ---- Eq. 7: T_overhead ~ (size, num_str), small/big regimes ----
+    # The size feature is the effective in-flight element count size·batch
+    # (batch defaults to 1 on the paper's single-system campaign).
+    eff = lambda r: r["size"] * r.get("batch", 1)
+
     def fit_regime(rows, form, p0, tag):
-        size = np.array([r["size"] for r in rows], dtype=np.float64)
+        if not rows:
+            return None
+        size = np.array([eff(r) for r in rows], dtype=np.float64)
         nstr = np.array([r["num_str"] for r in rows], dtype=np.float64)
         t_ov = np.array([r["t_overhead"] for r in rows])
         (s_tr, s_te, n_tr, n_te, o_tr, o_te) = train_test_split(
@@ -104,8 +167,10 @@ def fit_stream_heuristic(
         metrics[f"{tag}_test"] = fit_metrics(form, (s_te, n_te), o_te, popt)
         return popt
 
-    small_rows = [r for r in data.rows if r["size"] <= M.SMALL_BIG_SPLIT]
-    big_rows = [r for r in data.rows if r["size"] > M.SMALL_BIG_SPLIT]
+    small_rows = [r for r in data.rows if eff(r) <= M.SMALL_BIG_SPLIT]
+    big_rows = [r for r in data.rows if eff(r) > M.SMALL_BIG_SPLIT]
+    if not small_rows and not big_rows:
+        raise ValueError("empty measurement campaign: no overhead rows to fit")
     popt_small = fit_regime(small_rows, M.overhead_small, M.OVERHEAD_SMALL_P0, "ov_small")
     popt_big = fit_regime(big_rows, M.overhead_big, M.OVERHEAD_BIG_P0, "ov_big")
 

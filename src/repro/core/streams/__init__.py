@@ -3,8 +3,10 @@ RTX 2080 Ti performance simulator that stands in for Nsight measurements on
 this CPU-only container (DESIGN.md §2.2)."""
 
 from repro.core.streams.timemodel import (
+    BATCH_CANDIDATES,
     STREAM_CANDIDATES,
     StageTimes,
+    batched_stage_times,
     gain,
     overhead_from_measurement,
     select_optimum,
@@ -21,8 +23,10 @@ from repro.core.streams.simulator import (
 )
 
 __all__ = [
+    "BATCH_CANDIDATES",
     "STREAM_CANDIDATES",
     "StageTimes",
+    "batched_stage_times",
     "gain",
     "overhead_from_measurement",
     "select_optimum",

@@ -5,14 +5,52 @@ code measures chunked device execution)."""
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.streams.simulator import StreamDataset
 from repro.core.streams.timemodel import overhead_from_measurement
+from repro.core.tridiag.batched import BatchedPartitionSolver
 from repro.core.tridiag.chunked import ChunkedPartitionSolver
 from repro.core.tridiag.reference import make_diag_dominant_system
+
+
+def _measure_cell(
+    rows: List[Dict],
+    dl, d, du, b,
+    *,
+    size: int,
+    batch: Optional[int],
+    solver_cls,
+    candidates: Sequence[int],
+    m: int,
+    reps: int,
+) -> None:
+    """One campaign cell: profile num_chunks=1, then sweep the candidates.
+
+    The 'sum' of overlappable time is the Stage-1 + Stage-3 device time
+    measured at num_chunks=1 (the no-streams profile, exactly how the paper
+    measured its Table-1 columns)."""
+    base = solver_cls(m=m, num_chunks=1)
+    base_timings = [base.solve_timed(dl, d, du, b)[1] for _ in range(reps)]
+    t_non = min(t.t_total_ms for t in base_timings)
+    s = min(t.t_stage1_ms + t.t_stage3_ms for t in base_timings)
+    for k in candidates:
+        if k == 1:
+            continue
+        solver = solver_cls(m=m, num_chunks=k)
+        for rep in range(reps):
+            _, t = solver.solve_timed(dl, d, du, b)
+            row = dict(
+                size=size, num_str=k, rep=rep, sum=s,
+                t_str=t.t_total_ms, t_non_str=t_non,
+                t_overhead=overhead_from_measurement(t.t_total_ms, t_non, s, k),
+                stage_times=None,
+            )
+            if batch is not None:
+                row["batch"] = batch
+            rows.append(row)
 
 
 def measure_dataset(
@@ -24,33 +62,42 @@ def measure_dataset(
     dtype=np.float64,
     seed: int = 0,
 ) -> StreamDataset:
-    """Wall-clock measurement campaign over (size × num_chunks).
-
-    The 'sum' of overlappable time on this path is the Stage-1 + Stage-3
-    device time measured at num_chunks=1 (the no-streams profile, exactly how
-    the paper measured its Table-1 columns).
-    """
+    """Wall-clock measurement campaign over (size × num_chunks)."""
     rows: List[Dict] = []
     for n in sizes:
         dl, d, du, b, _ = make_diag_dominant_system(n, seed=seed, dtype=dtype)
-        base = ChunkedPartitionSolver(m=m, num_chunks=1)
-        base_timings = [base.solve_timed(dl, d, du, b)[1] for _ in range(reps)]
-        t_non = min(t.t_total_ms for t in base_timings)
-        s = min(t.t_stage1_ms + t.t_stage3_ms for t in base_timings)
-        for k in candidates:
-            if k == 1:
-                continue
-            solver = ChunkedPartitionSolver(m=m, num_chunks=k)
-            for rep in range(reps):
-                _, t = solver.solve_timed(dl, d, du, b)
-                rows.append(
-                    dict(
-                        size=n, num_str=k, rep=rep, sum=s,
-                        t_str=t.t_total_ms, t_non_str=t_non,
-                        t_overhead=overhead_from_measurement(
-                            t.t_total_ms, t_non, s, k
-                        ),
-                        stage_times=None,
-                    )
-                )
+        _measure_cell(
+            rows, dl, d, du, b, size=n, batch=None,
+            solver_cls=ChunkedPartitionSolver, candidates=candidates,
+            m=m, reps=reps,
+        )
+    return StreamDataset(rows)
+
+
+def measure_batched_dataset(
+    sizes: Sequence[int],
+    batches: Sequence[int] = (1, 4, 16),
+    candidates: Sequence[int] = (1, 2, 4, 8, 16, 32),
+    *,
+    m: int = 10,
+    reps: int = 3,
+    dtype=np.float64,
+    seed: int = 0,
+) -> StreamDataset:
+    """Wall-clock campaign over the 2-D (size × batch) grid.
+
+    Each cell solves a batch of B independent size-n systems with the fused
+    `BatchedPartitionSolver`; rows carry the ``batch`` key consumed by
+    ``fit_batched_stream_heuristic``."""
+    rows: List[Dict] = []
+    for n in sizes:
+        for batch in batches:
+            dl, d, du, b, _ = make_diag_dominant_system(
+                n, seed=seed, batch=(batch,), dtype=dtype
+            )
+            _measure_cell(
+                rows, dl, d, du, b, size=n, batch=batch,
+                solver_cls=BatchedPartitionSolver, candidates=candidates,
+                m=m, reps=reps,
+            )
     return StreamDataset(rows)

@@ -128,53 +128,69 @@ class StreamSimulator:
         self.seed = seed
 
     # ------------------------------------------------------------ true laws --
-    def components(self, n: int) -> StageTimes:
-        """Noise-free per-operation times (Table-1 analogue)."""
+    def components(self, n: int, batch: int = 1) -> StageTimes:
+        """Noise-free per-operation times (Table-1 analogue).
+
+        ``batch`` models a fused batch of B same-size systems
+        (`repro.core.tridiag.batched`): the overlappable work, transfers and
+        kernel times are those of one B·n-element solve (the Table-1 anchors
+        are affine in total elements, so interpolating at n·B also fuses the
+        launch-cost floor into a single launch), transfer latency is paid
+        once for the packed batch, and the host dispatches B reduced solves.
+        """
         g = self.gpu
+        nt = n * batch
         xf = _FP32_XFER if self.precision == "fp32" else 1.0
         kf = (_FP32_KERNEL if self.precision == "fp32" else 1.0) * g.kernel_scale
         cf = _FP32_CPU if self.precision == "fp32" else 1.0
         comp = [
-            _anchor_interp(n, [(k, v[i]) for k, v in _TABLE1_ANCHORS.items()])
+            _anchor_interp(nt, [(k, v[i]) for k, v in _TABLE1_ANCHORS.items()])
             for i in range(4)
         ]
         t1_comp, t1_d2h, t3_h2d, t3_comp = comp
         return StageTimes(
-            t1_h2d=g.h2d_ms_per_elem * n * xf + g.xfer_latency_ms,
+            t1_h2d=g.h2d_ms_per_elem * nt * xf + g.xfer_latency_ms,
             t1_comp=t1_comp * kf,
             t1_d2h=t1_d2h * xf,
-            t2_comp=g.cpu_ms_per_elem * n * cf + g.cpu_latency_ms,
+            t2_comp=g.cpu_ms_per_elem * nt * cf + g.cpu_latency_ms * batch,
             t3_h2d=t3_h2d * xf,
             t3_comp=t3_comp * kf,
-            t3_d2h=g.d2h_ms_per_elem * n * xf + g.xfer_latency_ms,
+            t3_d2h=g.d2h_ms_per_elem * nt * xf + g.xfer_latency_ms,
         )
 
-    def overhead_true(self, n: int, num_str: int) -> float:
-        """Ground-truth stream overhead (idle + creation), Eq.-5 convention."""
+    def overhead_true(self, n: int, num_str: int, batch: int = 1) -> float:
+        """Ground-truth stream overhead (idle + creation), Eq.-5 convention.
+
+        The size-dependent terms see the *total* in-flight work n·batch —
+        Eq. 5's overhead absorbs imperfect-overlap residuals that scale with
+        the work in flight, and a fused batch multiplies exactly that.
+        """
         if num_str <= 1:
             return 0.0
         g = self.gpu
+        nt = n * batch
         L = math.log2(num_str)
-        a = g.ov_a0 + g.ov_a_big * max(0.0, (n - g.ov_a_knee) / 1e6) ** g.ov_a_pow
-        b = g.ov_b_inf + g.ov_b_small * math.exp(-n / g.ov_b_knee)
+        a = g.ov_a0 + g.ov_a_big * max(0.0, (nt - g.ov_a_knee) / 1e6) ** g.ov_a_pow
+        b = g.ov_b_inf + g.ov_b_small * math.exp(-nt / g.ov_b_knee)
         ov = a + b * L + g.ov_c * L * L
         if self.precision == "fp32":
             ov *= _FP32_OVERHEAD
         return ov
 
-    def t_non_str_true(self, n: int) -> float:
-        return t_non_str(self.components(n))
+    def t_non_str_true(self, n: int, batch: int = 1) -> float:
+        return t_non_str(self.components(n, batch))
 
-    def t_str_true(self, n: int, num_str: int) -> float:
+    def t_str_true(self, n: int, num_str: int, batch: int = 1) -> float:
         if num_str <= 1:
-            return self.t_non_str_true(n)
-        st = self.components(n)
-        return t_str_model(st, num_str, self.overhead_true(n, num_str))
+            return self.t_non_str_true(n, batch)
+        st = self.components(n, batch)
+        return t_str_model(st, num_str, self.overhead_true(n, num_str, batch))
 
     def actual_optimum(self, n: int,
-                       candidates: Sequence[int] = STREAM_CANDIDATES) -> int:
+                       candidates: Sequence[int] = STREAM_CANDIDATES,
+                       batch: int = 1) -> int:
         """argmin over candidates of the true streamed time (Table-4 N_act)."""
-        return min(candidates, key=lambda k: self.t_str_true(n, k))
+        return min(candidates, key=lambda k: self.t_str_true(n, k, batch))
 
     # ---------------------------------------------------------- measurement --
     def _noise(self, *key: int) -> float:
@@ -183,46 +199,56 @@ class StreamSimulator:
         )
         return float(np.exp(rng.normal(0.0, self.gpu.noise)))
 
-    def measure_components(self, n: int, rep: int = 0) -> StageTimes:
+    def measure_components(self, n: int, rep: int = 0, batch: int = 1) -> StageTimes:
         """Noisy per-operation measurement (the 'no streams' profiling run)."""
-        st = self.components(n)
+        st = self.components(n, batch)
         vals = {
-            f: getattr(st, f) * self._noise(n, 1, rep, i)
+            f: getattr(st, f) * self._noise(n * batch, 1, rep, i)
             for i, f in enumerate(st.__dataclass_fields__)
         }
         return StageTimes(**vals)
 
-    def measure_t_str(self, n: int, num_str: int, rep: int = 0) -> float:
-        return self.t_str_true(n, num_str) * self._noise(n, 2, num_str, rep)
+    def measure_t_str(self, n: int, num_str: int, rep: int = 0,
+                      batch: int = 1) -> float:
+        return self.t_str_true(n, num_str, batch) * self._noise(
+            n * batch, 2, num_str, rep
+        )
 
-    def measure_t_non_str(self, n: int, rep: int = 0) -> float:
-        return self.t_non_str_true(n) * self._noise(n, 3, rep)
+    def measure_t_non_str(self, n: int, rep: int = 0, batch: int = 1) -> float:
+        return self.t_non_str_true(n, batch) * self._noise(n * batch, 3, rep)
 
     def dataset(
         self,
         sizes: Sequence[int] = PAPER_SIZES,
         candidates: Sequence[int] = STREAM_CANDIDATES,
         reps: int = 1,
+        batches: Sequence[int] = (1,),
     ) -> "StreamDataset":
-        """The full measurement campaign the paper's ML pipeline consumes."""
+        """The full measurement campaign the paper's ML pipeline consumes.
+
+        ``batches`` extends it to the 2-D (size × batch) grid consumed by
+        ``fit_batched_stream_heuristic``; the default reproduces the paper's
+        single-system campaign exactly.
+        """
         rows: List[Dict] = []
         for n in sizes:
-            for rep in range(reps):
-                st = self.measure_components(n, rep)
-                tns = self.measure_t_non_str(n, rep)
-                s = sum_overlap(st)
-                for k in candidates:
-                    if k == 1:
-                        continue
-                    ts = self.measure_t_str(n, k, rep)
-                    rows.append(
-                        dict(
-                            size=n, num_str=k, rep=rep,
-                            sum=s, t_str=ts, t_non_str=tns,
-                            t_overhead=overhead_from_measurement(ts, tns, s, k),
-                            stage_times=st,
+            for batch in batches:
+                for rep in range(reps):
+                    st = self.measure_components(n, rep, batch)
+                    tns = self.measure_t_non_str(n, rep, batch)
+                    s = sum_overlap(st)
+                    for k in candidates:
+                        if k == 1:
+                            continue
+                        ts = self.measure_t_str(n, k, rep, batch)
+                        rows.append(
+                            dict(
+                                size=n, num_str=k, rep=rep, batch=batch,
+                                sum=s, t_str=ts, t_non_str=tns,
+                                t_overhead=overhead_from_measurement(ts, tns, s, k),
+                                stage_times=st,
+                            )
                         )
-                    )
         return StreamDataset(rows)
 
 
@@ -239,13 +265,15 @@ class StreamDataset:
         return StreamDataset([r for r in self.rows if pred(r)])
 
     def per_size_sum(self) -> Tuple[np.ndarray, np.ndarray]:
-        """(sizes, sum) with one entry per (size, rep) — the Eq.-4 dataset."""
+        """(sizes, sum) with one entry per (size, batch, rep) — the Eq.-4
+        dataset. ``size`` here is the per-system size; batched fits feed the
+        effective size·batch feature (see ``fit_batched_stream_heuristic``)."""
         seen, xs, ys = set(), [], []
         for r in self.rows:
-            key = (r["size"], r["rep"])
+            key = (r["size"], r.get("batch", 1), r["rep"])
             if key not in seen:
                 seen.add(key)
-                xs.append(r["size"])
+                xs.append(r["size"] * r.get("batch", 1))
                 ys.append(r["sum"])
         return np.array(xs, dtype=np.float64), np.array(ys)
 

@@ -11,6 +11,12 @@ from typing import Iterable, Sequence, Tuple
 # Powers of two up to the Hyper-Q hardware-queue limit (paper §2.1).
 STREAM_CANDIDATES: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
 
+# Batch sizes covered by the batched (size × batch) campaign. The batch axis
+# multiplies the overlappable work (Eq. 3) — B fused systems behave like one
+# B·n-element solve (repro.core.tridiag.batched), so the same Eq. 1–6 apply
+# to the fused StageTimes.
+BATCH_CANDIDATES: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+
 
 @dataclass(frozen=True)
 class StageTimes:
@@ -23,6 +29,22 @@ class StageTimes:
     t3_h2d: float
     t3_comp: float
     t3_d2h: float
+
+
+def batched_stage_times(st: StageTimes, batch: int) -> StageTimes:
+    """Eq. 1–3 operand for a fused batch of ``batch`` equal-size systems.
+
+    Every per-operation time scales linearly — the fused solve is one
+    B·n-element system, so all four overlappable components, the dominant
+    transfers and the host reduced solve grow ×B. This is the latency-free
+    limit; the simulator refines it with fixed per-campaign transfer latency
+    and per-system host dispatch (negligible beyond small n·B).
+    """
+    if batch < 1:
+        raise ValueError("batch must be >= 1")
+    return StageTimes(
+        **{f: batch * getattr(st, f) for f in st.__dataclass_fields__}
+    )
 
 
 def t_non_str(st: StageTimes) -> float:

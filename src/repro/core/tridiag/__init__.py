@@ -13,6 +13,24 @@ N-row tridiagonal system into P = N/m sub-systems ("blocks") of m rows:
 `chunked.py` adds the CUDA-stream analogue: the block dimension is split into
 `num_chunks` slices whose host staging / device compute overlap via JAX async
 dispatch (see DESIGN.md §2.1).
+
+Batched solving & autotune
+--------------------------
+`batched.py` extends the pipeline to many independent systems at once — the
+production regime of the ROADMAP north star. A batch of B size-n systems
+fuses (by concatenation, with boundary couplings zeroed) into one B·n solve
+whose reduced system decouples exactly, so chunks span system boundaries::
+
+    from repro.core.tridiag.batched import BatchedPartitionSolver, solve_batched
+
+    x = solve_batched(dl, d, du, b, m=10)            # (B, n) -> (B, n)
+    solver = BatchedPartitionSolver(m=10, num_chunks=8)
+    x, timing = solver.solve_timed(dl, d, du, b)     # chunked + wall-clock
+
+The optimum chunk count over the 2-D (size, batch) grid is fitted/predicted
+by ``repro.core.autotune.heuristic.BatchedStreamHeuristic`` (ground truth:
+``StreamSimulator.actual_optimum(n, batch=B)``), and served by
+``repro.serve.solve.BatchedSolveService``.
 """
 
 from repro.core.tridiag.thomas import thomas, thomas_factor, thomas_solve_factored
@@ -30,6 +48,13 @@ from repro.core.tridiag.reference import (
     tridiag_to_dense,
 )
 from repro.core.tridiag.chunked import ChunkedPartitionSolver
+from repro.core.tridiag.batched import (
+    BatchedPartitionSolver,
+    fuse_systems,
+    solve_batched,
+    split_systems,
+    thomas_batched,
+)
 
 __all__ = [
     "thomas",
@@ -45,6 +70,11 @@ __all__ = [
     "tridiag_matvec",
     "tridiag_to_dense",
     "ChunkedPartitionSolver",
+    "BatchedPartitionSolver",
+    "solve_batched",
+    "thomas_batched",
+    "fuse_systems",
+    "split_systems",
 ]
 
 

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.core.tridiag.partition import PartitionCoeffs
 from repro.kernels import common
-from repro.kernels.partition_stage1.stage1 import stage1_tiled
+from repro.kernels.partition_stage1.stage1 import stage1_tiled, stage1_tiled_batched
 
 
 @functools.partial(jax.jit, static_argnames=("m", "block_p", "interpret"))
@@ -57,3 +57,54 @@ def partition_stage1_pallas(
         raise ValueError(f"system size {n} not divisible by m={m}")
     block_p = min(block_p, common.round_up(n // m, common.LANES))
     return _stage1_impl(dl, d, du, b, m=m, block_p=block_p, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block_p", "interpret"))
+def _stage1_impl_batched(dl, d, du, b, *, m: int, block_p: int, interpret: bool):
+    bsz, n = d.shape
+    p = n // m
+    pp = common.round_up(p, block_p)
+    blk = lambda a, fill: common.pad_axis_to(
+        a.reshape(bsz, p, m).transpose(0, 2, 1), pp, axis=2, value=fill
+    )  # (B, m, pp)
+    dlT, dT, duT, bT = blk(dl, 0.0), blk(d, 1.0), blk(du, 0.0), blk(b, 0.0)
+    yT, vT, wT = stage1_tiled_batched(
+        dlT, dT, duT, bT, m=m, block_p=block_p, interpret=interpret
+    )
+    y, v, w = (a[:, :, :p].transpose(0, 2, 1) for a in (yT, vT, wT))  # (B, p, m-1)
+
+    # ---- reduced interface rows, vectorized over the batch axis ----
+    dlb, db, dub, bb = (a.reshape(bsz, p, m) for a in (dl, d, du, b))
+    aL, bL, cL, dL = dlb[:, :, m - 1], db[:, :, m - 1], dub[:, :, m - 1], bb[:, :, m - 1]
+    pad = lambda a: jnp.concatenate(
+        [a[:, 1:, 0], jnp.zeros_like(a[:, :1, 0])], axis=1
+    )
+    y_nf, v_nf, w_nf = pad(y), pad(v), pad(w)
+    red_dl = -aL * v[:, :, m - 2]
+    red_d = bL - aL * w[:, :, m - 2] - cL * v_nf
+    red_du = -cL * w_nf
+    red_b = dL - aL * y[:, :, m - 2] - cL * y_nf
+    return PartitionCoeffs(y, v, w, red_dl, red_d, red_du, red_b)
+
+
+def partition_stage1_pallas_batched(
+    dl: jax.Array,
+    d: jax.Array,
+    du: jax.Array,
+    b: jax.Array,
+    *,
+    m: int = 10,
+    block_p: int = 512,
+    interpret: bool | None = None,
+) -> PartitionCoeffs:
+    """Stage 1 for a (B, N) batch of systems via one batched-grid Pallas call."""
+    if interpret is None:
+        interpret = common.interpret_default()
+    dl, d, du, b = (jnp.asarray(a) for a in (dl, d, du, b))
+    if d.ndim != 2:
+        raise ValueError(f"expected (batch, n) operands, got shape {d.shape}")
+    n = d.shape[-1]
+    if n % m:
+        raise ValueError(f"system size {n} not divisible by m={m}")
+    block_p = min(block_p, common.round_up(n // m, common.LANES))
+    return _stage1_impl_batched(dl, d, du, b, m=m, block_p=block_p, interpret=interpret)

@@ -98,3 +98,37 @@ def stage1_tiled(
         scratch_shapes=[pltpu.VMEM((m - 1, block_p), dT.dtype)],
         interpret=interpret,
     )(dlT, dT, duT, bT)
+
+
+def stage1_tiled_batched(
+    dlT: jax.Array,
+    dT: jax.Array,
+    duT: jax.Array,
+    bT: jax.Array,
+    *,
+    m: int,
+    block_p: int,
+    interpret: bool,
+):
+    """Batched grid over (B, m, P) operands: grid = (B, P // block_p).
+
+    The leading grid dimension walks the batch of independent systems; the
+    block-spec squeezes it (block size ``None``), so the per-tile kernel body
+    is shared with the single-system path. On TPU the flattened grid keeps
+    the HBM→VMEM pipeline running across system boundaries — the multi-SLAE
+    analogue of the paper's streams spanning the whole workload.
+    """
+    bsz, _, p = dT.shape
+    grid = (bsz, p // block_p)
+    in_spec = pl.BlockSpec((None, m, block_p), lambda bi, i: (bi, 0, i))
+    out_spec = pl.BlockSpec((None, m - 1, block_p), lambda bi, i: (bi, 0, i))
+    out_shape = jax.ShapeDtypeStruct((bsz, m - 1, p), dT.dtype)
+    return pl.pallas_call(
+        functools.partial(_stage1_kernel, m=m),
+        grid=grid,
+        in_specs=[in_spec] * 4,
+        out_specs=[out_spec] * 3,
+        out_shape=[out_shape] * 3,
+        scratch_shapes=[pltpu.VMEM((m - 1, block_p), dT.dtype)],
+        interpret=interpret,
+    )(dlT, dT, duT, bT)

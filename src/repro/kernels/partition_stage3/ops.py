@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from repro.core.tridiag.partition import PartitionCoeffs
 from repro.core.tridiag.thomas import thomas
 from repro.kernels import common
-from repro.kernels.partition_stage3.stage3 import stage3_tiled
+from repro.kernels.partition_stage3.stage3 import stage3_tiled, stage3_tiled_batched
 
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
@@ -61,3 +61,54 @@ def partition_solve_pallas(
     coeffs = partition_stage1_pallas(dl, d, du, b, m=m, interpret=interpret)
     s = thomas(coeffs.red_dl, coeffs.red_d, coeffs.red_du, coeffs.red_b)
     return partition_stage3_pallas(coeffs, s, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def _stage3_impl_batched(y, v, w, s, *, block_p: int, interpret: bool):
+    bsz, p, mi = y.shape
+    m = mi + 1
+    pp = common.round_up(p, block_p)
+    padT = lambda a: common.pad_axis_to(a.transpose(0, 2, 1), pp, axis=2)
+    s_left = jnp.concatenate([jnp.zeros_like(s[:, :1]), s[:, :-1]], axis=1)
+    xT = stage3_tiled_batched(
+        padT(y), padT(v), padT(w),
+        common.pad_axis_to(s[:, None, :], pp, axis=2),
+        common.pad_axis_to(s_left[:, None, :], pp, axis=2),
+        m=m, block_p=block_p, interpret=interpret,
+    )
+    return xT[:, :, :p].transpose(0, 2, 1).reshape(bsz, p * m)
+
+
+def partition_stage3_pallas_batched(
+    coeffs: PartitionCoeffs,
+    s: jax.Array,
+    *,
+    block_p: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched-grid back-substitution for (B, P, m-1) spikes and (B, P) s."""
+    if interpret is None:
+        interpret = common.interpret_default()
+    p = s.shape[-1]
+    block_p = min(block_p, common.round_up(p, common.LANES))
+    return _stage3_impl_batched(
+        coeffs.y, coeffs.v, coeffs.w, s, block_p=block_p, interpret=interpret
+    )
+
+
+def partition_solve_pallas_batched(
+    dl: jax.Array,
+    d: jax.Array,
+    du: jax.Array,
+    b: jax.Array,
+    *,
+    m: int = 10,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Full batched (B, N) partition solve: batched-grid Pallas Stage 1 and
+    Stage 3 with a batch-vectorized jnp Thomas on the B reduced systems."""
+    from repro.kernels.partition_stage1.ops import partition_stage1_pallas_batched
+
+    coeffs = partition_stage1_pallas_batched(dl, d, du, b, m=m, interpret=interpret)
+    s = thomas(coeffs.red_dl, coeffs.red_d, coeffs.red_du, coeffs.red_b)
+    return partition_stage3_pallas_batched(coeffs, s, interpret=interpret)

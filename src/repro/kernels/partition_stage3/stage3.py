@@ -46,3 +46,34 @@ def stage3_tiled(
         out_shape=jax.ShapeDtypeStruct((m, p), yT.dtype),
         interpret=interpret,
     )(yT, vT, wT, s, s_left)
+
+
+def stage3_tiled_batched(
+    yT: jax.Array,
+    vT: jax.Array,
+    wT: jax.Array,
+    s: jax.Array,
+    s_left: jax.Array,
+    *,
+    m: int,
+    block_p: int,
+    interpret: bool,
+) -> jax.Array:
+    """Batched grid over (B, m-1, P) spikes + (B, 1, P) interface rows.
+
+    Mirror of ``stage1_tiled_batched``: leading grid dim over the batch,
+    squeezed out of every block so the kernel body is shared.
+    """
+    bsz, _, p = yT.shape
+    grid = (bsz, p // block_p)
+    spike_spec = pl.BlockSpec((None, m - 1, block_p), lambda bi, i: (bi, 0, i))
+    row_spec = pl.BlockSpec((None, 1, block_p), lambda bi, i: (bi, 0, i))
+    out_spec = pl.BlockSpec((None, m, block_p), lambda bi, i: (bi, 0, i))
+    return pl.pallas_call(
+        functools.partial(_stage3_kernel, m=m),
+        grid=grid,
+        in_specs=[spike_spec] * 3 + [row_spec] * 2,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, m, p), yT.dtype),
+        interpret=interpret,
+    )(yT, vT, wT, s, s_left)

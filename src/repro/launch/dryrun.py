@@ -225,6 +225,8 @@ def run_cells(archs, shapes, meshes, out_path, *, remat="full"):
                     if compiled is not None:
                         print(compiled.memory_analysis())
                         ca = compiled.cost_analysis()
+                        if isinstance(ca, (list, tuple)):  # older jax: per-computation list
+                            ca = ca[0] if ca else {}
                         print({k: v for k, v in (ca or {}).items()
                                if k in ("flops", "bytes accessed")})
                     del compiled

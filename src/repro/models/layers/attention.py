@@ -20,6 +20,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.parallel.compat import shard_map
+
 from repro.configs.base import ArchConfig
 from repro.models.layers.norms import init_rmsnorm, rms_norm
 from repro.models.layers.rotary import apply_rope
@@ -164,7 +166,7 @@ def _sp_cache_attention(q, k, v, q_pos, k_pos, pctx: ParallelCtx, *,
         acc_g = jax.lax.psum(acc * scale[..., None], seq_axes)
         return _finalize(m_g, den_g, acc_g, q_b.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=pctx.mesh,
         in_specs=(

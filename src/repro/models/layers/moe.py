@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.compat import shard_map
+
 from repro.configs.base import ArchConfig
 from repro.models.layers.mlp import init_mlp, mlp_apply
 from repro.parallel.ctx import ParallelCtx
@@ -189,7 +191,7 @@ def moe_apply(params: dict, x: jax.Array, cfg: ArchConfig, pctx: ParallelCtx):
             return jax.lax.psum(y, pctx.model_axis).reshape(xs.shape)
 
         ba = pctx.batch_axes
-        y = jax.shard_map(
+        y = shard_map(
             shard_fn,
             mesh=pctx.mesh,
             in_specs=(

@@ -1,0 +1,24 @@
+"""Version-compat shims for JAX APIs that moved between releases."""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` (new API) with fallback to ``jax.experimental``.
+
+    Older JAX (< 0.5) only ships ``jax.experimental.shard_map.shard_map``,
+    whose replication-check kwarg is spelled ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

@@ -1,3 +1,14 @@
 from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.serve.solve import (
+    BatchedSolveService,
+    SolveRequest,
+    make_batched_solve_step,
+)
 
-__all__ = ["make_decode_step", "make_prefill_step"]
+__all__ = [
+    "make_decode_step",
+    "make_prefill_step",
+    "BatchedSolveService",
+    "SolveRequest",
+    "make_batched_solve_step",
+]

@@ -1,0 +1,132 @@
+"""Serving-side batched tridiagonal solving.
+
+The production story of the reproduction (ROADMAP north star): solve requests
+arrive one system at a time, get grouped by size into batches, and each batch
+is dispatched as one fused chunked solve whose chunk count is picked by the
+(size × batch) stream heuristic — the serving analogue of the paper picking
+``num_str`` before launching the kernels.
+
+Usage::
+
+    from repro.core.autotune import fit_batched_stream_heuristic
+    from repro.core.streams import StreamSimulator
+    from repro.serve.solve import BatchedSolveService, SolveRequest
+
+    h = fit_batched_stream_heuristic(StreamSimulator(seed=1).dataset(batches=(1, 8, 64)))
+    svc = BatchedSolveService(heuristic=h, max_batch=64)
+    for rid, (dl, d, du, b) in enumerate(systems):
+        svc.submit(SolveRequest(rid, dl, d, du, b))
+    results = svc.flush()          # {rid: solution}, batched under the hood
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.autotune.heuristic import BatchedStreamHeuristic
+from repro.core.tridiag.batched import BatchedPartitionSolver, solve_batched
+
+
+@dataclass
+class SolveRequest:
+    """One tridiagonal system to solve (the serving unit of work)."""
+
+    rid: int
+    dl: np.ndarray
+    d: np.ndarray
+    du: np.ndarray
+    b: np.ndarray
+
+    @property
+    def size(self) -> int:
+        return int(np.asarray(self.d).shape[-1])
+
+
+def make_batched_solve_step(m: int = 10) -> Callable:
+    """Jitted (B, n) solve step, mirror of ``serve.steps`` step builders."""
+    return jax.jit(partial(solve_batched, m=m))
+
+
+class BatchedSolveService:
+    """Groups same-size solve requests and dispatches fused chunked batches.
+
+    ``heuristic`` (a fitted :class:`BatchedStreamHeuristic`) picks the chunk
+    count per (size, batch) cell; without one the service falls back to a
+    fixed ``default_chunks``. Stats track systems/sec — the throughput metric
+    of ``benchmarks/batched_throughput.py``.
+    """
+
+    def __init__(
+        self,
+        heuristic: Optional[BatchedStreamHeuristic] = None,
+        *,
+        m: int = 10,
+        max_batch: int = 64,
+        default_chunks: int = 1,
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.heuristic = heuristic
+        self.m = m
+        self.max_batch = max_batch
+        self.default_chunks = default_chunks
+        self._queues: Dict[int, List[SolveRequest]] = {}
+        self._solvers: Dict[int, BatchedPartitionSolver] = {}
+        self.stats = {"batches": 0, "systems": 0, "wall_s": 0.0}
+
+    # -- scheduling ----------------------------------------------------------
+    def submit(self, req: SolveRequest) -> None:
+        if req.size % self.m:
+            raise ValueError(
+                f"request {req.rid}: size {req.size} not divisible by m={self.m}"
+            )
+        self._queues.setdefault(req.size, []).append(req)
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def pick_chunks(self, size: int, batch: int) -> int:
+        if self.heuristic is None:
+            return self.default_chunks
+        return self.heuristic.predict_optimum(size, batch)
+
+    # -- execution -----------------------------------------------------------
+    def _solver(self, num_chunks: int) -> BatchedPartitionSolver:
+        if num_chunks not in self._solvers:
+            self._solvers[num_chunks] = BatchedPartitionSolver(
+                m=self.m, num_chunks=num_chunks
+            )
+        return self._solvers[num_chunks]
+
+    def flush(self) -> Dict[int, np.ndarray]:
+        """Solve everything pending; returns {rid: solution}."""
+        out: Dict[int, np.ndarray] = {}
+        t0 = time.perf_counter()
+        for size, queue in sorted(self._queues.items()):
+            while queue:
+                active, queue = queue[: self.max_batch], queue[self.max_batch :]
+                batch = len(active)
+                solver = self._solver(self.pick_chunks(size, batch))
+                stacked = [
+                    np.stack([np.asarray(getattr(r, f)) for r in active])
+                    for f in ("dl", "d", "du", "b")
+                ]
+                x = solver.solve(*stacked)
+                for i, r in enumerate(active):
+                    out[r.rid] = x[i]
+                self.stats["batches"] += 1
+                self.stats["systems"] += batch
+            self._queues[size] = queue
+        self._queues = {s: q for s, q in self._queues.items() if q}
+        self.stats["wall_s"] += time.perf_counter() - t0
+        return out
+
+    @property
+    def systems_per_sec(self) -> float:
+        return self.stats["systems"] / max(self.stats["wall_s"], 1e-12)

@@ -1,0 +1,102 @@
+"""Regression tests pinning the fitted heuristics to the simulator's ground
+truth: the paper's 1-D optimum(size) pipeline, its published baselines, and
+the batched 2-D optimum(size, batch) extension."""
+
+import numpy as np
+import pytest
+
+from repro.core.autotune.heuristic import (
+    fit_batched_stream_heuristic,
+    fit_stream_heuristic,
+    gomez_luna_optimum,
+)
+from repro.core.streams import BATCH_CANDIDATES, PAPER_SIZES, StreamSimulator
+
+
+def _within_one_pow2(pred: int, act: int) -> bool:
+    return pred in (act, act * 2, max(1, act // 2))
+
+
+@pytest.fixture(scope="module")
+def sim_and_heuristic():
+    sim = StreamSimulator(seed=1)
+    return sim, fit_stream_heuristic(sim.dataset(reps=2))
+
+
+def test_predictions_within_one_pow2_of_actual(sim_and_heuristic):
+    sim, h = sim_and_heuristic
+    for n in PAPER_SIZES:
+        pred, act = h.predict_optimum(n), sim.actual_optimum(n)
+        assert _within_one_pow2(pred, act), (n, pred, act)
+
+
+def test_gomez_luna_reproduces_published_column():
+    """The [6] baseline n* = sqrt(sum/τ) on the paper's measured sums must
+    give Table 1's 7.8 / 8.6 / 15.8 / 45.0 / 139.8."""
+    sums = {4e3: 0.273440, 4e4: 0.327424, 4e5: 1.104320,
+            4e6: 8.997282, 4e7: 86.876620}
+    expected = {4e3: 7.8, 4e4: 8.6, 4e5: 15.8, 4e6: 45.0, 4e7: 139.8}
+    for n, s in sums.items():
+        assert gomez_luna_optimum(s) == pytest.approx(expected[n], abs=0.05)
+
+
+def test_fp32_prediction_is_halved_fp64_optimum(sim_and_heuristic):
+    _, h = sim_and_heuristic
+    for n in PAPER_SIZES:
+        o64 = h.predict_optimum(n)
+        assert h.predict_optimum_fp32(n) == max(1, o64 // 2), n
+
+
+# --------------------------------------------------- batched (size, batch) ---
+BATCH_SIZES = (10_000, 50_000, 100_000, 400_000, 1_000_000, 4_000_000)
+BATCHES = BATCH_CANDIDATES  # the canonical (size × batch) campaign grid
+
+
+@pytest.fixture(scope="module")
+def sim_and_batched_heuristic():
+    sim = StreamSimulator(seed=1)
+    data = sim.dataset(sizes=BATCH_SIZES, batches=BATCHES, reps=2)
+    return sim, fit_batched_stream_heuristic(data)
+
+
+def test_batched_fit_quality(sim_and_batched_heuristic):
+    _, h = sim_and_batched_heuristic
+    assert h.metrics["sum_train"]["r2"] > 0.999
+    assert h.metrics["sum_test"]["r2"] > 0.999
+    for tag in ("ov_small", "ov_big"):
+        assert h.metrics[f"{tag}_train"]["r2"] > 0.9, h.metrics
+        assert h.metrics[f"{tag}_test"]["r2"] > 0.85, h.metrics
+
+
+def test_batched_predictions_within_one_pow2_of_actual(sim_and_batched_heuristic):
+    sim, h = sim_and_batched_heuristic
+    for n in BATCH_SIZES:
+        for batch in BATCHES:
+            pred = h.predict_optimum(n, batch)
+            act = sim.actual_optimum(n, batch=batch)
+            assert _within_one_pow2(pred, act), (n, batch, pred, act)
+
+
+def test_batched_predictor_collapses_to_1d_at_batch_1(sim_and_batched_heuristic):
+    _, h = sim_and_batched_heuristic
+    for n in BATCH_SIZES:
+        assert h.predict_optimum(n, 1) == h.base.predict_optimum(n), n
+        assert h.predict_sum(n, 1)[0] == pytest.approx(h.base.predict_sum(n)[0])
+
+
+def test_batched_sum_model_is_linear_in_total_elements(sim_and_batched_heuristic):
+    """Eq. 4 generalizes to total in-flight elements: predicted sum for
+    (n, B) matches the single-system prediction at n·B."""
+    _, h = sim_and_batched_heuristic
+    for n, batch in ((50_000, 8), (100_000, 16), (1_000_000, 4)):
+        a = float(h.predict_sum(n, batch)[0])
+        b = float(h.predict_sum(n * batch, 1)[0])
+        assert a == pytest.approx(b, rel=1e-12)
+
+
+def test_batched_fp32_is_halved(sim_and_batched_heuristic):
+    _, h = sim_and_batched_heuristic
+    for n in BATCH_SIZES[:3]:
+        for batch in (1, 8, 64):
+            o64 = h.predict_optimum(n, batch)
+            assert h.predict_optimum_fp32(n, batch) == max(1, o64 // 2)

@@ -1,0 +1,76 @@
+"""Hypothesis property tests, split out so the deterministic suites collect
+and run even when hypothesis is not installed (requirements-dev.txt has it)."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.tridiag import ensure_x64  # noqa: E402
+
+ensure_x64()
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.autotune.linreg import LinearModel  # noqa: E402
+from repro.core.tridiag import (  # noqa: E402
+    make_diag_dominant_system,
+    partition_solve,
+    solve_batched,
+    thomas_numpy,
+    tridiag_matvec,
+)
+
+
+def _rel_err(x, ref):
+    return np.max(np.abs(x - ref)) / (np.max(np.abs(ref)) + 1e-30)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(min_value=2, max_value=40),
+    m=st.integers(min_value=2, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    dominance=st.floats(min_value=1.5, max_value=10.0),
+)
+def test_property_partition_residual_small(p, m, seed, dominance):
+    """For any diagonally dominant system, the residual is tiny and the
+    partition solution agrees with Thomas (algorithm-equivalence invariant)."""
+    n = p * m
+    dl, d, du, b, _ = make_diag_dominant_system(n, seed=seed, dominance=dominance)
+    x = np.asarray(partition_solve(*map(jnp.asarray, (dl, d, du, b)), m=m))
+    r = tridiag_matvec(dl, d, du, x) - b
+    scale = np.max(np.abs(b)) + 1.0
+    assert np.max(np.abs(r)) / scale < 1e-9
+    assert _rel_err(x, thomas_numpy(dl, d, du, b)) < 1e-8
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    a=st.floats(-5, 5), b=st.floats(-5, 5),
+    seed=st.integers(0, 10_000),
+)
+def test_property_linreg_recovers_noiseless_line(a, b, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-10, 10, size=30)
+    y = a * x + b
+    m = LinearModel.fit(x, y)
+    assert np.allclose(m.predict(x), y, atol=1e-6 + 1e-6 * abs(a) * 10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bsz=st.integers(min_value=1, max_value=6),
+    p=st.integers(min_value=2, max_value=15),
+    m=st.integers(min_value=2, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_batched_solve_matches_per_system(bsz, p, m, seed):
+    """The batched multi-SLAE solve equals B independent Thomas solves."""
+    n = p * m
+    dl, d, du, b, _ = make_diag_dominant_system(n, seed=seed, batch=(bsz,))
+    x = np.asarray(solve_batched(dl, d, du, b, m=m))
+    for i in range(bsz):
+        assert _rel_err(x[i], thomas_numpy(dl[i], d[i], du[i], b[i])) < 1e-8

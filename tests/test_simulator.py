@@ -1,0 +1,84 @@
+"""Calibration tests for the analytic StreamSimulator (promised by its
+docstring): Table-4 actual optima, overhead monotonicity, and the batched
+(size × batch) extension's ground-truth laws."""
+
+import pytest
+
+from repro.core.streams import (
+    BATCH_CANDIDATES,
+    PAPER_SIZES,
+    STREAM_CANDIDATES,
+    StreamSimulator,
+    batched_stage_times,
+    sum_overlap,
+)
+
+# Paper Table 4: size -> actual optimum number of streams (FP64, 2080 Ti).
+TABLE4 = {
+    1_000: 1, 4_000: 1, 5_000: 1, 8_000: 1, 10_000: 1, 40_000: 1, 50_000: 1,
+    80_000: 1, 100_000: 1, 400_000: 4, 500_000: 8, 800_000: 8, 1_000_000: 8,
+    2_500_000: 16, 4_000_000: 32, 5_000_000: 32, 7_500_000: 32, 8_000_000: 32,
+    10_000_000: 32, 25_000_000: 32, 40_000_000: 32, 50_000_000: 32,
+    75_000_000: 32, 80_000_000: 32, 100_000_000: 32,
+}
+
+
+def test_actual_optimum_matches_table4_for_all_paper_sizes():
+    sim = StreamSimulator()
+    assert set(TABLE4) == set(PAPER_SIZES)
+    for n in PAPER_SIZES:
+        assert sim.actual_optimum(n) == TABLE4[n], f"size {n}"
+
+
+@pytest.mark.parametrize("n", [4_000, 100_000, 1_000_000, 40_000_000])
+def test_overhead_true_monotone_in_num_str(n):
+    """More streams never cost less overhead (Eq.-5 ground truth)."""
+    sim = StreamSimulator()
+    ovs = [sim.overhead_true(n, k) for k in STREAM_CANDIDATES if k > 1]
+    assert sim.overhead_true(n, 1) == 0.0
+    assert all(b > a for a, b in zip(ovs, ovs[1:])), (n, ovs)
+
+
+# ------------------------------------------------------------ batched laws ---
+def test_batched_components_default_is_single_system():
+    sim = StreamSimulator()
+    assert sim.components(400_000) == sim.components(400_000, batch=1)
+
+
+def test_batched_overlappable_work_scales_with_batch():
+    """Batch multiplies the Eq.-3 overlappable sum, sub-linearly where the
+    per-launch fixed cost dominates (fusing amortizes it) and converging to
+    the exact ×B `batched_stage_times` limit once the slope dominates."""
+    sim = StreamSimulator()
+    for n in (100_000, 1_000_000, 10_000_000):
+        s1 = sum_overlap(sim.components(n))
+        prev = s1
+        for batch in (2, 8, 32):
+            sB = sum_overlap(sim.components(n, batch))
+            linear = sum_overlap(batched_stage_times(sim.components(n), batch))
+            assert linear == pytest.approx(batch * s1, rel=1e-12)
+            assert prev < sB <= 1.001 * linear, (n, batch)  # amortized, never more
+            assert sB > 0.4 * linear, (n, batch)  # still ~linear growth
+            prev = sB
+    # slope-dominated regime: the ×B limit is tight
+    s1 = sum_overlap(sim.components(10_000_000))
+    for batch in (2, 8, 32):
+        sB = sum_overlap(sim.components(10_000_000, batch))
+        assert sB == pytest.approx(batch * s1, rel=0.02), batch
+
+
+def test_batched_optimum_monotone_in_batch():
+    """More systems in flight never want fewer streams."""
+    sim = StreamSimulator()
+    for n in (10_000, 100_000, 1_000_000):
+        opts = [sim.actual_optimum(n, batch=b) for b in BATCH_CANDIDATES]
+        assert all(b >= a for a, b in zip(opts, opts[1:])), (n, opts)
+        assert opts[-1] > opts[0], (n, opts)  # batching genuinely moves it
+
+
+def test_batched_optimum_tracks_fused_size():
+    """A batch of B size-n systems fuses into one B·n solve, so its optimum
+    matches the single-system optimum at the fused size."""
+    sim = StreamSimulator()
+    for n, batch in ((10_000, 16), (50_000, 8), (250_000, 4), (1_000_000, 32)):
+        assert sim.actual_optimum(n, batch=batch) == sim.actual_optimum(n * batch)
