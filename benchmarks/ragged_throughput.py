@@ -1,0 +1,95 @@
+"""Ragged mixed-size fused throughput: systems/sec vs (mix, num_chunks).
+
+The interleaved/fused-batch lever of Gloster et al. / Carroll et al.
+(PAPERS.md) applied to heterogeneous work: a mix of different-size systems
+fuses into one Σ nᵢ solve (`repro.core.tridiag.ragged`), so mixed serving
+traffic is one dispatch instead of one per size class. Each row checks the
+fused solutions against per-system ``thomas_numpy`` (fp64 oracle) and shows
+the chunk count the heuristic picks for the mix's effective size, plus how
+many dispatches the size-segregated PR-1 baseline would have needed.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run --only ragged_throughput
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.autotune.heuristic import fit_batched_stream_heuristic
+from repro.core.streams.simulator import StreamSimulator
+from repro.core.tridiag.ragged import RaggedPartitionSolver
+from repro.core.tridiag.reference import make_diag_dominant_system, thomas_numpy
+
+
+def ragged_throughput(
+    mixes=(
+        (200, 1000, 5000),
+        (2000,) * 6 + (20_000,) * 2,
+        (500, 2_000, 8_000, 32_000, 128_000),
+    ),
+    chunk_counts=(1, 2, 4, 8),
+    *,
+    m: int = 10,
+    reps: int = 3,
+):
+    """systems/sec + fp64 error per (mix, num_chunks) cell, heuristic pick.
+
+    The heuristic column is fitted on the calibrated simulator's batched
+    campaign (this container has no GPU) and applied to the mix via
+    ``predict_optimum_ragged`` — i.e. at effective size Σ nᵢ. ``seg_batches``
+    counts the dispatches a same-size-only batcher needs for the mix (one per
+    distinct size); the ragged path always needs exactly one.
+    """
+    # The paper's precision is FP64; scope the x64 flag to this bench so the
+    # LM benches in the same driver run keep default f32/bf16 promotion.
+    prev_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        return _ragged_throughput(mixes, chunk_counts, m=m, reps=reps)
+    finally:
+        jax.config.update("jax_enable_x64", prev_x64)
+
+
+def _ragged_throughput(mixes, chunk_counts, *, m: int, reps: int):
+    sim = StreamSimulator(seed=1)
+    heur = fit_batched_stream_heuristic(
+        sim.dataset(sizes=(10_000, 100_000, 1_000_000), batches=(1, 8, 64), reps=2)
+    )
+    header = [
+        "mix", "total_size", "num_chunks", "ms_per_batch", "systems_per_sec",
+        "max_rel_err", "heuristic_pick", "seg_batches",
+    ]
+    rows = []
+    for mix in mixes:
+        mix = tuple(int(n) for n in mix)
+        systems = [
+            make_diag_dominant_system(n, seed=i)[:4] for i, n in enumerate(mix)
+        ]
+        refs = [thomas_numpy(*s) for s in systems]
+        pick = heur.predict_optimum_ragged(mix)
+        for k in chunk_counts:
+            solver = RaggedPartitionSolver(m=m, num_chunks=k)
+            xs = solver.solve(systems)  # untimed warmup + correctness probe
+            err = max(
+                float(np.max(np.abs(x - r)) / (np.max(np.abs(r)) + 1e-30))
+                for x, r in zip(xs, refs)
+            )
+            if err > 1e-10:
+                raise RuntimeError(
+                    f"ragged fused solve off fp64 oracle: mix={mix} k={k} err={err:.2e}"
+                )
+            best = np.inf
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                solver.solve(systems)
+                best = min(best, time.perf_counter() - t0)
+            rows.append([
+                "+".join(str(n) for n in mix), sum(mix), k,
+                round(best * 1e3, 3), round(len(mix) / best, 1),
+                f"{err:.2e}", pick, len(set(mix)),
+            ])
+    return header, rows

@@ -91,6 +91,11 @@ class BatchedStreamHeuristic:
     unchanged. Fit with :func:`fit_batched_stream_heuristic` on a campaign
     that sweeps ``batches`` (``StreamSimulator.dataset(..., batches=...)`` or
     ``repro.core.streams.measure.measure_batched_dataset``).
+
+    Ragged mixed-size batches (`repro.core.tridiag.ragged`) generalise the
+    feature: the fused solve has Σ nᵢ elements, so
+    :meth:`predict_optimum_ragged` prices the batch by that effective size —
+    n·B is just the equal-sizes special case.
     """
 
     base: StreamHeuristic
@@ -112,6 +117,16 @@ class BatchedStreamHeuristic:
 
     def predict_optimum_fp32(self, size: float, batch: int = 1) -> int:
         return max(1, self.predict_optimum(size, batch) // 2)
+
+    def predict_optimum_ragged(self, sizes: Sequence[int]) -> int:
+        """Optimum chunk count for a ragged fused batch of ``sizes``.
+
+        The effective size of the fused solve is Σ nᵢ
+        (`repro.core.tridiag.plan.effective_size`); the Eq. 6 selection rule
+        is applied at that size, exactly as a same-size batch is priced at
+        n·B.
+        """
+        return self.base.predict_optimum(float(np.sum(np.asarray(sizes, np.float64))))
 
 
 def fit_batched_stream_heuristic(

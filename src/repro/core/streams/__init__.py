@@ -7,6 +7,7 @@ from repro.core.streams.timemodel import (
     STREAM_CANDIDATES,
     StageTimes,
     batched_stage_times,
+    fused_stage_times,
     gain,
     overhead_from_measurement,
     select_optimum,
@@ -27,6 +28,7 @@ __all__ = [
     "STREAM_CANDIDATES",
     "StageTimes",
     "batched_stage_times",
+    "fused_stage_times",
     "gain",
     "overhead_from_measurement",
     "select_optimum",

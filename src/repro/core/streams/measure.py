@@ -5,43 +5,46 @@ code measures chunked device execution)."""
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.streams.simulator import StreamDataset
 from repro.core.streams.timemodel import overhead_from_measurement
 from repro.core.tridiag.batched import BatchedPartitionSolver
-from repro.core.tridiag.chunked import ChunkedPartitionSolver
+from repro.core.tridiag.chunked import ChunkTiming, ChunkedPartitionSolver
+from repro.core.tridiag.ragged import RaggedPartitionSolver
 from repro.core.tridiag.reference import make_diag_dominant_system
 
 
 def _measure_cell(
     rows: List[Dict],
-    dl, d, du, b,
+    run: Callable[[int], ChunkTiming],
     *,
     size: int,
     batch: Optional[int],
-    solver_cls,
     candidates: Sequence[int],
-    m: int,
     reps: int,
+    mix: Optional[Tuple[int, ...]] = None,
 ) -> None:
     """One campaign cell: profile num_chunks=1, then sweep the candidates.
 
-    The 'sum' of overlappable time is the Stage-1 + Stage-3 device time
-    measured at num_chunks=1 (the no-streams profile, exactly how the paper
-    measured its Table-1 columns)."""
-    base = solver_cls(m=m, num_chunks=1)
-    base_timings = [base.solve_timed(dl, d, du, b)[1] for _ in range(reps)]
+    ``run(k)`` performs one solve at k chunks and returns its timing. Every
+    configuration gets one untimed warmup solve before the timed repeats so
+    trace/compile time never lands in the dataset (it used to skew the first
+    repeat of small-n rows). The 'sum' of overlappable time is the Stage-1 +
+    Stage-3 device time measured at num_chunks=1 (the no-streams profile,
+    exactly how the paper measured its Table-1 columns)."""
+    run(1)  # untimed warmup
+    base_timings = [run(1) for _ in range(reps)]
     t_non = min(t.t_total_ms for t in base_timings)
     s = min(t.t_stage1_ms + t.t_stage3_ms for t in base_timings)
     for k in candidates:
         if k == 1:
             continue
-        solver = solver_cls(m=m, num_chunks=k)
+        run(k)  # untimed warmup (new chunking => new operand shapes)
         for rep in range(reps):
-            _, t = solver.solve_timed(dl, d, du, b)
+            t = run(k)
             row = dict(
                 size=size, num_str=k, rep=rep, sum=s,
                 t_str=t.t_total_ms, t_non_str=t_non,
@@ -50,6 +53,8 @@ def _measure_cell(
             )
             if batch is not None:
                 row["batch"] = batch
+            if mix is not None:
+                row["mix"] = mix
             rows.append(row)
 
 
@@ -66,10 +71,11 @@ def measure_dataset(
     rows: List[Dict] = []
     for n in sizes:
         dl, d, du, b, _ = make_diag_dominant_system(n, seed=seed, dtype=dtype)
+        run = lambda k: ChunkedPartitionSolver(m=m, num_chunks=k).solve_timed(
+            dl, d, du, b
+        )[1]
         _measure_cell(
-            rows, dl, d, du, b, size=n, batch=None,
-            solver_cls=ChunkedPartitionSolver, candidates=candidates,
-            m=m, reps=reps,
+            rows, run, size=n, batch=None, candidates=candidates, reps=reps
         )
     return StreamDataset(rows)
 
@@ -95,9 +101,43 @@ def measure_batched_dataset(
             dl, d, du, b, _ = make_diag_dominant_system(
                 n, seed=seed, batch=(batch,), dtype=dtype
             )
+            run = lambda k: BatchedPartitionSolver(m=m, num_chunks=k).solve_timed(
+                dl, d, du, b
+            )[1]
             _measure_cell(
-                rows, dl, d, du, b, size=n, batch=batch,
-                solver_cls=BatchedPartitionSolver, candidates=candidates,
-                m=m, reps=reps,
+                rows, run, size=n, batch=batch, candidates=candidates, reps=reps
             )
+    return StreamDataset(rows)
+
+
+def measure_ragged_dataset(
+    mixes: Sequence[Sequence[int]],
+    candidates: Sequence[int] = (1, 2, 4, 8, 16, 32),
+    *,
+    m: int = 10,
+    reps: int = 3,
+    dtype=np.float64,
+    seed: int = 0,
+) -> StreamDataset:
+    """Wall-clock campaign over ragged mixed-size batches.
+
+    Each cell fuses one *mix* — a tuple of heterogeneous system sizes — into a
+    single `RaggedPartitionSolver` solve and sweeps the chunk candidates. Rows
+    carry ``size = Σ nᵢ`` (the effective size the heuristic prices ragged
+    batches by) and the originating ``mix``, so the same
+    ``fit_batched_stream_heuristic`` pipeline consumes them unchanged."""
+    rows: List[Dict] = []
+    for mix in mixes:
+        mix = tuple(int(n) for n in mix)
+        systems = [
+            make_diag_dominant_system(n, seed=seed + i, dtype=dtype)[:4]
+            for i, n in enumerate(mix)
+        ]
+        run = lambda k: RaggedPartitionSolver(m=m, num_chunks=k).solve_timed(
+            systems
+        )[1]
+        _measure_cell(
+            rows, run, size=sum(mix), batch=None, candidates=candidates,
+            reps=reps, mix=mix,
+        )
     return StreamDataset(rows)

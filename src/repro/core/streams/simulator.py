@@ -265,12 +265,14 @@ class StreamDataset:
         return StreamDataset([r for r in self.rows if pred(r)])
 
     def per_size_sum(self) -> Tuple[np.ndarray, np.ndarray]:
-        """(sizes, sum) with one entry per (size, batch, rep) — the Eq.-4
+        """(sizes, sum) with one entry per (size, batch, mix, rep) — the Eq.-4
         dataset. ``size`` here is the per-system size; batched fits feed the
-        effective size·batch feature (see ``fit_batched_stream_heuristic``)."""
+        effective size·batch feature (see ``fit_batched_stream_heuristic``).
+        Ragged campaign rows carry their ``mix`` in the key so two mixes with
+        equal totals both contribute their sum measurements."""
         seen, xs, ys = set(), [], []
         for r in self.rows:
-            key = (r["size"], r.get("batch", 1), r["rep"])
+            key = (r["size"], r.get("batch", 1), r.get("mix"), r["rep"])
             if key not in seen:
                 seen.add(key)
                 xs.append(r["size"] * r.get("batch", 1))

@@ -47,6 +47,26 @@ def batched_stage_times(st: StageTimes, batch: int) -> StageTimes:
     )
 
 
+def fused_stage_times(parts: Sequence[StageTimes]) -> StageTimes:
+    """Eq. 1–3 operand for a fused *ragged* batch of heterogeneous systems.
+
+    Every per-operation time of the fused Σ nᵢ-element solve is the sum of
+    the constituents' — :func:`batched_stage_times` is the equal-parts
+    special case (``fused_stage_times([st]*B) == batched_stage_times(st, B)``).
+    Like that function this is the latency-free linear limit; the simulator
+    refines it with fixed per-campaign latencies.
+    """
+    parts = list(parts)
+    if not parts:
+        raise ValueError("fused_stage_times needs at least one system")
+    return StageTimes(
+        **{
+            f: sum(getattr(p, f) for p in parts)
+            for f in StageTimes.__dataclass_fields__
+        }
+    )
+
+
 def t_non_str(st: StageTimes) -> float:
     """Eq. (1): serial (stream-less) execution time."""
     return (

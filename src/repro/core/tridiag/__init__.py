@@ -31,6 +31,23 @@ The optimum chunk count over the 2-D (size, batch) grid is fitted/predicted
 by ``repro.core.autotune.heuristic.BatchedStreamHeuristic`` (ground truth:
 ``StreamSimulator.actual_optimum(n, batch=B)``), and served by
 ``repro.serve.solve.BatchedSolveService``.
+
+Plan/execute architecture
+-------------------------
+`plan.py` is the single execution path: an immutable ``SolvePlan`` (fused
+block layout, chunk bounds, halo map, per-system offsets; chunk count from a
+pluggable ``ChunkPolicy``) executed by a stateless ``PlanExecutor`` whose
+jitted stage callables are cached module-wide. ``ChunkedPartitionSolver``,
+``BatchedPartitionSolver`` and `ragged.py`'s ``RaggedPartitionSolver`` are
+thin frontends that only build plans. `ragged.py` fuses *mixed-size* systems
+into one block axis (exact decoupling via zeroed boundary couplings), so one
+fused chunked solve covers a heterogeneous batch — priced by its effective
+size ``Σ nᵢ`` through the stream heuristic::
+
+    from repro.core.tridiag import RaggedPartitionSolver, build_plan
+
+    plan = build_plan((200, 1000, 5000), m=10, policy=HeuristicChunkPolicy(h))
+    xs = RaggedPartitionSolver(m=10, policy=HeuristicChunkPolicy(h)).solve(systems)
 """
 
 from repro.core.tridiag.thomas import thomas, thomas_factor, thomas_solve_factored
@@ -47,6 +64,17 @@ from repro.core.tridiag.reference import (
     tridiag_matvec,
     tridiag_to_dense,
 )
+from repro.core.tridiag.plan import (
+    ChunkPolicy,
+    ChunkTiming,
+    FixedChunkPolicy,
+    HeuristicChunkPolicy,
+    PlanExecutor,
+    SolvePlan,
+    build_plan,
+    effective_size,
+    jitted_stages,
+)
 from repro.core.tridiag.chunked import ChunkedPartitionSolver
 from repro.core.tridiag.batched import (
     BatchedPartitionSolver,
@@ -54,6 +82,12 @@ from repro.core.tridiag.batched import (
     solve_batched,
     split_systems,
     thomas_batched,
+)
+from repro.core.tridiag.ragged import (
+    RaggedPartitionSolver,
+    fuse_ragged,
+    solve_ragged,
+    split_ragged,
 )
 
 __all__ = [
@@ -69,12 +103,25 @@ __all__ = [
     "thomas_numpy",
     "tridiag_matvec",
     "tridiag_to_dense",
+    "ChunkPolicy",
+    "ChunkTiming",
+    "FixedChunkPolicy",
+    "HeuristicChunkPolicy",
+    "PlanExecutor",
+    "SolvePlan",
+    "build_plan",
+    "effective_size",
+    "jitted_stages",
     "ChunkedPartitionSolver",
     "BatchedPartitionSolver",
     "solve_batched",
     "thomas_batched",
     "fuse_systems",
     "split_systems",
+    "RaggedPartitionSolver",
+    "fuse_ragged",
+    "solve_ragged",
+    "split_ragged",
 ]
 
 

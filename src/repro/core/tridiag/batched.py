@@ -43,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tridiag import partition
-from repro.core.tridiag.chunked import ChunkedPartitionSolver, ChunkTiming
+from repro.core.tridiag.plan import ChunkTiming, PlanExecutor, build_plan
 from repro.core.tridiag.thomas import thomas
 
 Array = jax.Array
@@ -112,12 +112,18 @@ class BatchedPartitionSolver:
     span system boundaries — a batch of B systems offers B× the overlappable
     work of one system, which is exactly the knob the batched stream
     heuristic (`repro.core.autotune.heuristic.BatchedStreamHeuristic`) tunes.
+
+    Thin frontend over the plan layer: the batch is fused by concatenation and
+    laid out as a ``(n,)*B`` `SolvePlan`; chunk bounds and halo handling live
+    in `repro.core.tridiag.plan.PlanExecutor`.
     """
 
     def __init__(self, m: int = 10, num_chunks: int = 1):
+        if num_chunks < 1:
+            raise ValueError("num_chunks must be >= 1")
         self.m = m
         self.num_chunks = num_chunks
-        self._inner = ChunkedPartitionSolver(m=m, num_chunks=num_chunks)
+        self._executor = PlanExecutor()
 
     def solve(
         self, dl: np.ndarray, d: np.ndarray, du: np.ndarray, b: np.ndarray
@@ -134,5 +140,6 @@ class BatchedPartitionSolver:
         if n % self.m:
             raise ValueError(f"system size {n} not divisible by m={self.m}")
         fused = fuse_systems(dl, d, du, b)
-        x, timing = self._inner.solve_timed(*fused)
+        plan = build_plan((n,) * batch, self.m, num_chunks=self.num_chunks)
+        x, timing = self._executor.execute(plan, *fused)
         return split_systems(x, batch), timing

@@ -9,39 +9,26 @@ without blocking, so the runtime pipelines transfer and compute of successive
 chunks. Stage 2 (the reduced solve) runs on the host in NumPy, exactly as the
 paper keeps it on the CPU.
 
-This module is used by the measurement path of the autotuner
-(`repro.core.streams.measure`) and by `examples/autotune_streams.py`.
+Since the plan/execute refactor this module is a *thin frontend*: the chunk
+bounds, halo map and ghost-block splicing live in
+`repro.core.tridiag.plan` (`SolvePlan` / `PlanExecutor`); the solver here
+just builds a single-system plan and runs it. It is used by the measurement
+path of the autotuner (`repro.core.streams.measure`) and by
+`examples/autotune_streams.py`.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from functools import partial
 from typing import List, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tridiag import partition
-from repro.core.tridiag.reference import thomas_numpy
-
-
-@dataclass
-class ChunkTiming:
-    """Wall-clock phase breakdown of one chunked solve (milliseconds)."""
-
-    num_chunks: int
-    t_stage1_ms: float
-    t_stage2_ms: float
-    t_stage3_ms: float
-    t_total_ms: float
-    n: int = 0
-
-    @property
-    def phases(self) -> Tuple[float, float, float]:
-        return (self.t_stage1_ms, self.t_stage2_ms, self.t_stage3_ms)
+from repro.core.tridiag.plan import (  # noqa: F401  (ChunkTiming re-exported)
+    ChunkTiming,
+    PlanExecutor,
+    SolvePlan,
+    build_plan,
+)
 
 
 class ChunkedPartitionSolver:
@@ -57,18 +44,11 @@ class ChunkedPartitionSolver:
             raise ValueError("num_chunks must be >= 1")
         self.m = m
         self.num_chunks = num_chunks
-        self._stage1 = jax.jit(partial(partition.partition_stage1, m=m))
-        self._stage3 = jax.jit(partition.partition_stage3)
+        self._executor = PlanExecutor()
 
-    # -- helpers -----------------------------------------------------------
-    def _chunk_bounds(self, num_blocks: int) -> List[Tuple[int, int]]:
-        k = min(self.num_chunks, num_blocks)
-        sizes = [num_blocks // k + (1 if i < num_blocks % k else 0) for i in range(k)]
-        bounds, start = [], 0
-        for s in sizes:
-            bounds.append((start, start + s))
-            start += s
-        return bounds
+    def plan_for(self, n: int) -> SolvePlan:
+        """The single-system plan this solver executes for size ``n``."""
+        return build_plan(n, self.m, num_chunks=self.num_chunks)
 
     # -- public API ---------------------------------------------------------
     def solve(
@@ -88,95 +68,10 @@ class ChunkedPartitionSolver:
         du: np.ndarray,
         b: np.ndarray,
     ) -> Tuple[np.ndarray, ChunkTiming]:
-        m = self.m
-        n = d.shape[-1]
-        if n % m:
-            raise ValueError(f"system size {n} not divisible by m={m}")
-        num_blocks = n // m
-        bounds = self._chunk_bounds(num_blocks)
-        row = lambda a, lo, hi: a[..., lo * m : hi * m]
-
-        t0 = time.perf_counter()
-        # ---- Stage 1: dispatch every chunk without blocking (the "streams").
-        # Each chunk carries one halo block: the reduced row of a chunk's last
-        # block references the *next* block's spikes, so chunks overlap by one
-        # block and the halo's own reduced row is dropped (recomputed by the
-        # owner chunk) — the standard halo-exchange trick.
-        coeffs: List[partition.PartitionCoeffs] = []
-        for lo, hi in bounds:
-            hi_halo = min(hi + 1, num_blocks)
-            chunk = [
-                jax.device_put(np.ascontiguousarray(row(a, lo, hi_halo)))
-                for a in (dl, d, du, b)
-            ]  # H2D analogue
-            c = self._stage1(*chunk)
-            nb = hi - lo
-            c = partition.PartitionCoeffs(
-                y=c.y[..., :nb, :],
-                v=c.v[..., :nb, :],
-                w=c.w[..., :nb, :],
-                red_dl=c.red_dl[..., :nb],
-                red_d=c.red_d[..., :nb],
-                red_du=c.red_du[..., :nb],
-                red_b=c.red_b[..., :nb],
-            )
-            coeffs.append(c)
-        # Block only when the host needs the reduced rows (D2H analogue).
-        red = [
-            np.concatenate([np.asarray(getattr(c, f)) for c in coeffs], axis=-1)
-            for f in ("red_dl", "red_d", "red_du", "red_b")
-        ]
-        t1 = time.perf_counter()
-
-        # ---- Stage 2: host-side reduced solve (paper: CPU).
-        s = thomas_numpy(*red)
-        t2 = time.perf_counter()
-
-        # ---- Stage 3: per-chunk back-substitution; chunk p needs s_{p-1}, s_p.
-        outs = []
-        for (lo, hi), c in zip(bounds, coeffs):
-            s_chunk = jnp.asarray(s[..., lo:hi])
-            s_left_edge = (
-                jnp.zeros_like(s_chunk[..., :1])
-                if lo == 0
-                else jnp.asarray(s[..., lo - 1 : lo])
-            )
-            # partition_stage3 derives s_{p-1} by shifting within the chunk, so
-            # splice the true left edge in via concatenation of a ghost block.
-            outs.append(_stage3_with_ghost(self._stage3, c, s_chunk, s_left_edge))
-        x = np.concatenate([np.asarray(o) for o in outs], axis=-1)
-        t3 = time.perf_counter()
-
-        timing = ChunkTiming(
-            num_chunks=len(bounds),
-            t_stage1_ms=(t1 - t0) * 1e3,
-            t_stage2_ms=(t2 - t1) * 1e3,
-            t_stage3_ms=(t3 - t2) * 1e3,
-            t_total_ms=(t3 - t0) * 1e3,
-            n=n,
-        )
-        return x, timing
-
-
-def _stage3_with_ghost(stage3_fn, coeffs, s_chunk, s_left_edge):
-    """Run stage 3 on a chunk whose left neighbour lives in another chunk."""
-    ghost = partition.PartitionCoeffs(
-        y=jnp.zeros_like(coeffs.y[..., :1, :]),
-        v=jnp.zeros_like(coeffs.v[..., :1, :]),
-        w=jnp.zeros_like(coeffs.w[..., :1, :]),
-        red_dl=jnp.zeros_like(coeffs.red_dl[..., :1]),
-        red_d=jnp.zeros_like(coeffs.red_d[..., :1]),
-        red_du=jnp.zeros_like(coeffs.red_du[..., :1]),
-        red_b=jnp.zeros_like(coeffs.red_b[..., :1]),
-    )
-    padded = partition.PartitionCoeffs(
-        *[jnp.concatenate([g, c], axis=-2 if c.ndim > s_chunk.ndim else -1)
-          for g, c in zip(ghost, coeffs)]
-    )
-    s_padded = jnp.concatenate([s_left_edge, s_chunk], axis=-1)
-    x = stage3_fn(padded, s_padded)
-    m = coeffs.y.shape[-1] + 1
-    return x[..., m:]  # drop the ghost block
+        n = np.asarray(d).shape[-1]
+        if n % self.m:
+            raise ValueError(f"system size {n} not divisible by m={self.m}")
+        return self._executor.execute(self.plan_for(n), dl, d, du, b)
 
 
 def measure_chunk_sweep(
@@ -188,13 +83,19 @@ def measure_chunk_sweep(
     seed: int = 0,
     repeats: int = 3,
 ) -> List[ChunkTiming]:
-    """Measure wall-clock chunked solves across chunk counts (autotune input)."""
+    """Measure wall-clock chunked solves across chunk counts (autotune input).
+
+    Each configuration gets one untimed warmup solve before the timed repeats
+    so trace/compile time never pollutes the measurements (the jitted stages
+    are cached module-wide, but each chunk count sees new operand shapes).
+    """
     from repro.core.tridiag.reference import make_diag_dominant_system
 
     dl, d, du, b, _ = make_diag_dominant_system(n, seed=seed, dtype=dtype)
     results = []
     for k in chunk_counts:
         solver = ChunkedPartitionSolver(m=m, num_chunks=k)
+        solver.solve_timed(dl, d, du, b)  # untimed warmup
         best = None
         for _ in range(repeats):
             _, t = solver.solve_timed(dl, d, du, b)

@@ -1,0 +1,340 @@
+"""Plan/execute layer: one execution path for every partition-method solve.
+
+The paper's end product is an *algorithm* that picks ``num_str`` before any
+kernel launches; this module is the repo's structural analogue of that
+"decide, then dispatch" split.  A :class:`SolvePlan` is an immutable layout
+decision — which systems are fused onto the block axis, where the chunk
+("virtual stream") boundaries fall, which halo block each chunk carries, and
+where each system's solution lives in the fused vector.  A
+:class:`PlanExecutor` then runs the three partition stages from the plan:
+
+  Stage 1  per-chunk staged dispatch (H2D + kernel overlap — the CUDA-stream
+           analogue, see ``chunked.py``'s module docstring for the mapping),
+  Stage 2  host-side reduced solve (the paper keeps it on the CPU),
+  Stage 3  per-chunk back-substitution with a ghost block for the left edge.
+
+Frontends (`ChunkedPartitionSolver`, `BatchedPartitionSolver`,
+`RaggedPartitionSolver`, `serve.BatchedSolveService`) only *build plans*;
+chunk bounds, halo handling and ghost splicing live here and nowhere else.
+
+The chunk count is either given explicitly or chosen by a pluggable
+:class:`ChunkPolicy` — :class:`FixedChunkPolicy` or
+:class:`HeuristicChunkPolicy`, which prices a (possibly ragged) batch by its
+*effective size* ``Σ nᵢ`` through a fitted stream heuristic.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tridiag import partition
+from repro.core.tridiag.reference import thomas_numpy
+
+Sizes = Union[int, Sequence[int]]
+
+
+@dataclass
+class ChunkTiming:
+    """Wall-clock phase breakdown of one planned solve (milliseconds)."""
+
+    num_chunks: int
+    t_stage1_ms: float
+    t_stage2_ms: float
+    t_stage3_ms: float
+    t_total_ms: float
+    n: int = 0
+
+    @property
+    def phases(self) -> Tuple[float, float, float]:
+        return (self.t_stage1_ms, self.t_stage2_ms, self.t_stage3_ms)
+
+
+def effective_size(sizes: Sizes) -> int:
+    """Effective element count ``Σ nᵢ`` of a (possibly ragged) fused batch.
+
+    A fused batch presents the device with one ``Σ nᵢ``-element solve, so this
+    is the size feature the stream heuristic prices it by — the ragged
+    generalisation of the ``n·B`` feature of the same-size batched campaign.
+    """
+    if isinstance(sizes, (int, np.integer)):
+        return int(sizes)
+    return int(sum(int(n) for n in sizes))
+
+
+# ------------------------------------------------------------ jitted stages --
+# Module-level cache of the jitted stage callables. Frontends and services
+# construct solver objects freely (one per chunk count, per request batch, per
+# sweep cell); tracing/compilation must not follow suit. The callables are
+# batch-polymorphic (leading dims pass through), so one cached stage-1 per
+# block size `m` — and a single stage-3, which takes no m — serves the single,
+# batched and ragged paths alike; jax.jit specialises per operand shape
+# internally.
+_STAGE1_CACHE: Dict[int, Callable] = {}
+_STAGE3_CACHE: List[Callable] = []
+
+
+def jitted_stages(m: int) -> Tuple[Callable, Callable]:
+    """Return the cached ``(stage1, stage3)`` jitted callables for block size m."""
+    if m not in _STAGE1_CACHE:
+        _STAGE1_CACHE[m] = jax.jit(partial(partition.partition_stage1, m=m))
+    if not _STAGE3_CACHE:
+        _STAGE3_CACHE.append(jax.jit(partition.partition_stage3))
+    return _STAGE1_CACHE[m], _STAGE3_CACHE[0]
+
+
+# ------------------------------------------------------------ chunk policies --
+class ChunkPolicy:
+    """Strategy choosing the chunk ("virtual stream") count for a plan.
+
+    Subclasses implement :meth:`num_chunks`; `build_plan` clamps the answer
+    to ``[1, num_blocks]``.
+    """
+
+    def num_chunks(self, sizes: Tuple[int, ...], m: int) -> int:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class FixedChunkPolicy(ChunkPolicy):
+    """Always use ``k`` chunks (the paper's fixed-``num_str`` baseline)."""
+
+    k: int
+
+    def num_chunks(self, sizes: Tuple[int, ...], m: int) -> int:
+        return self.k
+
+
+@dataclass(frozen=True)
+class HeuristicChunkPolicy(ChunkPolicy):
+    """Price the batch by its effective size through a fitted heuristic.
+
+    Accepts either a 1-D ``StreamHeuristic`` or a ``BatchedStreamHeuristic``
+    (both expose ``predict_optimum``); the feature handed to the model is
+    ``effective_size(sizes)``, so ragged mixed-size batches are priced exactly
+    like the same-size fused batch with the same total element count.
+    """
+
+    heuristic: object
+    fp32: bool = False
+
+    def num_chunks(self, sizes: Tuple[int, ...], m: int) -> int:
+        eff = float(effective_size(sizes))
+        if self.fp32:
+            return int(self.heuristic.predict_optimum_fp32(eff))
+        return int(self.heuristic.predict_optimum(eff))
+
+
+# ----------------------------------------------------------------- the plan --
+@dataclass(frozen=True)
+class SolvePlan:
+    """Immutable layout of one fused chunked partition solve.
+
+    ``sizes`` lists the fused systems in order (one entry per system; a single
+    solve is the 1-tuple); ``chunk_bounds`` are half-open block-index ranges
+    over the fused block axis; ``halo_bounds`` extend each chunk by its one
+    right halo block (the reduced row of a chunk's last block references the
+    next block's spikes); ``offsets`` is the per-system element offset table
+    (length B+1) used to split the fused solution back apart.
+    """
+
+    m: int
+    sizes: Tuple[int, ...]
+    chunk_bounds: Tuple[Tuple[int, int], ...]
+    halo_bounds: Tuple[Tuple[int, int], ...]
+    offsets: Tuple[int, ...]
+
+    @property
+    def batch(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def total_size(self) -> int:
+        return self.offsets[-1]
+
+    @property
+    def num_blocks(self) -> int:
+        return self.total_size // self.m
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.chunk_bounds)
+
+    @property
+    def effective_size(self) -> int:
+        return self.total_size
+
+
+def build_plan(
+    sizes: Sizes,
+    m: int = 10,
+    *,
+    num_chunks: Optional[int] = None,
+    policy: Optional[ChunkPolicy] = None,
+) -> SolvePlan:
+    """Build the :class:`SolvePlan` for a batch of systems of ``sizes``.
+
+    ``sizes`` is one int (single solve) or a sequence (fused batch, possibly
+    ragged). Exactly one of ``num_chunks``/``policy`` may be given; with
+    neither, the plan is unchunked (``num_chunks=1``). The chunk count is
+    clamped to the fused block count, and blocks are split as evenly as
+    possible (remainder blocks go to the leading chunks).
+    """
+    if isinstance(sizes, (int, np.integer)):
+        sizes = (int(sizes),)
+    sizes = tuple(int(n) for n in sizes)
+    if not sizes:
+        raise ValueError("empty plan: at least one system required")
+    if m < 2:
+        raise ValueError("sub-system size m must be >= 2")
+    for n in sizes:
+        if n < m or n % m:
+            raise ValueError(f"system size {n} not divisible by m={m}")
+    if num_chunks is not None and policy is not None:
+        raise ValueError("pass num_chunks or policy, not both")
+    if policy is not None:
+        k = policy.num_chunks(sizes, m)
+    else:
+        k = 1 if num_chunks is None else num_chunks
+    if k < 1:
+        raise ValueError("num_chunks must be >= 1")
+
+    num_blocks = sum(sizes) // m
+    k = min(int(k), num_blocks)
+    chunk_sizes = [num_blocks // k + (1 if i < num_blocks % k else 0) for i in range(k)]
+    bounds: List[Tuple[int, int]] = []
+    start = 0
+    for s in chunk_sizes:
+        bounds.append((start, start + s))
+        start += s
+    halos = tuple((lo, min(hi + 1, num_blocks)) for lo, hi in bounds)
+
+    offsets = [0]
+    for n in sizes:
+        offsets.append(offsets[-1] + n)
+    return SolvePlan(
+        m=m,
+        sizes=sizes,
+        chunk_bounds=tuple(bounds),
+        halo_bounds=halos,
+        offsets=tuple(offsets),
+    )
+
+
+# -------------------------------------------------------------- the executor --
+class PlanExecutor:
+    """Runs stage-1 dispatch, host reduced solve and stage-3 from a plan.
+
+    Stateless: the jitted stage callables come from the module-level cache, so
+    executors (and the frontends that own them) are free to construct.
+    Operands are the *fused* diagonals/RHS — 1-D over ``plan.total_size``, or
+    with extra leading dims that pass straight through the stages.
+    """
+
+    def execute(
+        self,
+        plan: SolvePlan,
+        dl: np.ndarray,
+        d: np.ndarray,
+        du: np.ndarray,
+        b: np.ndarray,
+    ) -> Tuple[np.ndarray, ChunkTiming]:
+        m = plan.m
+        n = np.asarray(d).shape[-1]
+        if n != plan.total_size:
+            raise ValueError(
+                f"operands have {n} rows but the plan lays out {plan.total_size}"
+            )
+        row = lambda a, lo, hi: np.asarray(a)[..., lo * m : hi * m]
+        stage1, stage3 = jitted_stages(m)
+
+        t0 = time.perf_counter()
+        # ---- Stage 1: dispatch every chunk without blocking (the "streams").
+        # Each chunk carries one halo block (plan.halo_bounds): the reduced row
+        # of a chunk's last block references the *next* block's spikes, so
+        # chunks overlap by one block and the halo's own reduced row is dropped
+        # (recomputed by the owner chunk) — the standard halo-exchange trick.
+        coeffs: List[partition.PartitionCoeffs] = []
+        for (lo, hi), (_, hi_halo) in zip(plan.chunk_bounds, plan.halo_bounds):
+            chunk = [
+                jax.device_put(np.ascontiguousarray(row(a, lo, hi_halo)))
+                for a in (dl, d, du, b)
+            ]  # H2D analogue
+            c = stage1(*chunk)
+            nb = hi - lo
+            c = partition.PartitionCoeffs(
+                y=c.y[..., :nb, :],
+                v=c.v[..., :nb, :],
+                w=c.w[..., :nb, :],
+                red_dl=c.red_dl[..., :nb],
+                red_d=c.red_d[..., :nb],
+                red_du=c.red_du[..., :nb],
+                red_b=c.red_b[..., :nb],
+            )
+            coeffs.append(c)
+        # Block only when the host needs the reduced rows (D2H analogue).
+        red = [
+            np.concatenate([np.asarray(getattr(c, f)) for c in coeffs], axis=-1)
+            for f in ("red_dl", "red_d", "red_du", "red_b")
+        ]
+        t1 = time.perf_counter()
+
+        # ---- Stage 2: host-side reduced solve (paper: CPU).
+        s = thomas_numpy(*red)
+        t2 = time.perf_counter()
+
+        # ---- Stage 3: per-chunk back-substitution; chunk p needs s_{p-1}, s_p.
+        outs = []
+        for (lo, hi), c in zip(plan.chunk_bounds, coeffs):
+            s_chunk = jnp.asarray(s[..., lo:hi])
+            s_left_edge = (
+                jnp.zeros_like(s_chunk[..., :1])
+                if lo == 0
+                else jnp.asarray(s[..., lo - 1 : lo])
+            )
+            outs.append(_stage3_with_ghost(stage3, c, s_chunk, s_left_edge))
+        x = np.concatenate([np.asarray(o) for o in outs], axis=-1)
+        t3 = time.perf_counter()
+
+        timing = ChunkTiming(
+            num_chunks=plan.num_chunks,
+            t_stage1_ms=(t1 - t0) * 1e3,
+            t_stage2_ms=(t2 - t1) * 1e3,
+            t_stage3_ms=(t3 - t2) * 1e3,
+            t_total_ms=(t3 - t0) * 1e3,
+            n=n,
+        )
+        return x, timing
+
+
+def _stage3_with_ghost(stage3_fn, coeffs, s_chunk, s_left_edge):
+    """Run stage 3 on a chunk whose left neighbour lives in another chunk.
+
+    ``partition_stage3`` derives s_{p-1} by shifting within the chunk, so the
+    true left edge is spliced in by prepending a zeroed ghost block whose
+    interface unknown is the neighbouring chunk's last s; the ghost's own rows
+    are dropped from the output.
+    """
+    ghost = partition.PartitionCoeffs(
+        y=jnp.zeros_like(coeffs.y[..., :1, :]),
+        v=jnp.zeros_like(coeffs.v[..., :1, :]),
+        w=jnp.zeros_like(coeffs.w[..., :1, :]),
+        red_dl=jnp.zeros_like(coeffs.red_dl[..., :1]),
+        red_d=jnp.zeros_like(coeffs.red_d[..., :1]),
+        red_du=jnp.zeros_like(coeffs.red_du[..., :1]),
+        red_b=jnp.zeros_like(coeffs.red_b[..., :1]),
+    )
+    padded = partition.PartitionCoeffs(
+        *[jnp.concatenate([g, c], axis=-2 if c.ndim > s_chunk.ndim else -1)
+          for g, c in zip(ghost, coeffs)]
+    )
+    s_padded = jnp.concatenate([s_left_edge, s_chunk], axis=-1)
+    x = stage3_fn(padded, s_padded)
+    m = coeffs.y.shape[-1] + 1
+    return x[..., m:]  # drop the ghost block

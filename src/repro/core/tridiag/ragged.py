@@ -1,0 +1,166 @@
+"""Ragged mixed-size batch fusion: heterogeneous systems in one fused solve.
+
+`batched.py` fuses B *same-size* systems by concatenation; the decoupling
+identity it rests on never uses the equal sizes. With the solver convention
+``dl[0] = du[n-1] = 0``, concatenating systems of *any* sizes n₁..n_B gives a
+``Σ nᵢ``-row tridiagonal system whose partition solve is exactly the B
+independent solves:
+
+- Stage 1 is per-block; as long as every nᵢ is a multiple of the block size m,
+  no block straddles a system boundary, so blocks of different systems never
+  mix.
+- The reduced interface system decouples at every boundary: the first block of
+  each system has a zero left spike (``red_dl = 0``) and the last block a zero
+  right coupling (``red_du = 0``), so one Thomas sweep passes through each
+  boundary with an exact zero elimination weight.
+- Stage 3's cross-block term at a boundary is ``v·s_{p-1}`` with ``v = 0``.
+
+The per-system *offset table* (``SolvePlan.offsets``) records where each
+solution lives in the fused vector so :func:`split_ragged` can take it apart.
+One fused chunked solve therefore covers a heterogeneous batch — mixed-size
+serving traffic no longer waits for size-mates (`repro.serve.solve`).
+
+The heuristic prices a ragged batch by its **effective size** ``Σ nᵢ``
+(`repro.core.tridiag.plan.effective_size`,
+``BatchedStreamHeuristic.predict_optimum_ragged``): the fused solve presents
+the device with one ``Σ nᵢ``-element workload, the exact ragged analogue of
+the same-size campaign's ``n·B`` feature.
+
+API example::
+
+    from repro.core.tridiag.ragged import RaggedPartitionSolver, solve_ragged
+
+    systems = [(dl1, d1, du1, b1), (dl2, d2, du2, b2)]   # sizes 200 and 5000
+    xs = solve_ragged(systems, m=10, num_chunks=8)       # list of solutions
+
+    solver = RaggedPartitionSolver(m=10, policy=HeuristicChunkPolicy(heur))
+    xs, timing = solver.solve_timed(systems)
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.tridiag.plan import (
+    ChunkPolicy,
+    ChunkTiming,
+    PlanExecutor,
+    SolvePlan,
+    build_plan,
+    effective_size,
+)
+
+__all__ = [
+    "RaggedPartitionSolver",
+    "effective_size",
+    "fuse_ragged",
+    "solve_ragged",
+    "split_ragged",
+]
+
+System = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+
+def fuse_ragged(
+    systems: Sequence[System],
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, Tuple[int, ...]]:
+    """Fuse mixed-size systems into one ``(Σ nᵢ,)`` system.
+
+    ``systems`` is a sequence of 1-D ``(dl, d, du, b)`` tuples. Boundary
+    couplings (``dl[0]``, ``du[-1]`` of every system) are zeroed — they are
+    ignored by convention in the standalone solves, and zeroing them is what
+    makes the fused solve decouple exactly (module docstring). Mixed dtypes
+    promote via NumPy's usual rules. Returns the four fused arrays plus the
+    per-system size tuple consumed by :func:`build_plan`/:func:`split_ragged`.
+    """
+    if not systems:
+        raise ValueError("fuse_ragged needs at least one system")
+    dls, ds, dus, bs = [], [], [], []
+    sizes: List[int] = []
+    for dl, d, du, b in systems:
+        dl = np.array(dl, copy=True)
+        du = np.array(du, copy=True)
+        d = np.asarray(d)
+        b = np.asarray(b)
+        if d.ndim != 1:
+            raise ValueError(
+                f"ragged fusion takes 1-D systems, got shape {d.shape}"
+            )
+        dl[0] = 0.0
+        du[-1] = 0.0
+        sizes.append(d.shape[0])
+        dls.append(dl)
+        ds.append(d)
+        dus.append(du)
+        bs.append(b)
+    fused = tuple(np.ascontiguousarray(np.concatenate(p)) for p in (dls, ds, dus, bs))
+    return (*fused, tuple(sizes))
+
+
+def split_ragged(x: np.ndarray, sizes: Sequence[int]) -> List[np.ndarray]:
+    """Inverse of :func:`fuse_ragged` for the solution vector."""
+    x = np.asarray(x)
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    if x.shape[-1] != offsets[-1]:
+        raise ValueError(
+            f"solution has {x.shape[-1]} rows, sizes sum to {offsets[-1]}"
+        )
+    return [x[..., lo:hi] for lo, hi in zip(offsets[:-1], offsets[1:])]
+
+
+class RaggedPartitionSolver:
+    """Thin frontend: fuse mixed-size systems, build a plan, execute it.
+
+    ``policy`` (a :class:`~repro.core.tridiag.plan.ChunkPolicy`) prices each
+    batch by effective size at solve time; a fixed ``num_chunks`` is the
+    no-policy baseline. Chunks slice the fused block axis, so they span system
+    boundaries exactly as in the same-size batched solver.
+    """
+
+    def __init__(
+        self,
+        m: int = 10,
+        num_chunks: int = 1,
+        *,
+        policy: Optional[ChunkPolicy] = None,
+    ):
+        if num_chunks < 1:
+            raise ValueError("num_chunks must be >= 1")
+        if policy is not None and num_chunks != 1:
+            raise ValueError("pass num_chunks or policy, not both")
+        self.m = m
+        self.num_chunks = num_chunks
+        self.policy = policy
+        self._executor = PlanExecutor()
+
+    def plan_for(self, sizes: Sequence[int]) -> SolvePlan:
+        if self.policy is not None:
+            return build_plan(sizes, self.m, policy=self.policy)
+        return build_plan(sizes, self.m, num_chunks=self.num_chunks)
+
+    def solve(self, systems: Sequence[System]) -> List[np.ndarray]:
+        xs, _ = self.solve_timed(systems)
+        return xs
+
+    def solve_timed(
+        self, systems: Sequence[System]
+    ) -> Tuple[List[np.ndarray], ChunkTiming]:
+        dl, d, du, b, sizes = fuse_ragged(systems)
+        plan = self.plan_for(sizes)
+        x, timing = self._executor.execute(plan, dl, d, du, b)
+        return split_ragged(x, sizes), timing
+
+
+def solve_ragged(
+    systems: Sequence[System],
+    *,
+    m: int = 10,
+    num_chunks: int = 1,
+    policy: Optional[ChunkPolicy] = None,
+) -> List[np.ndarray]:
+    """One-shot ragged fused solve; returns the per-system solutions."""
+    return RaggedPartitionSolver(m=m, num_chunks=num_chunks, policy=policy).solve(
+        systems
+    )

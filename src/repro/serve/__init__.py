@@ -1,5 +1,6 @@
 from repro.serve.steps import make_decode_step, make_prefill_step
 from repro.serve.solve import (
+    AdmissionPolicy,
     BatchedSolveService,
     SolveRequest,
     make_batched_solve_step,
@@ -8,6 +9,7 @@ from repro.serve.solve import (
 __all__ = [
     "make_decode_step",
     "make_prefill_step",
+    "AdmissionPolicy",
     "BatchedSolveService",
     "SolveRequest",
     "make_batched_solve_step",
