@@ -1,0 +1,116 @@
+"""Stage-backend throughput: reference jnp stages vs Pallas kernels per plan.
+
+The paper's throughput lives in the stage-1/stage-3 device kernels; this
+sweep makes the backend axis of the plan executor
+(`repro.core.tridiag.plan.StageBackend`) measurable: every
+(backend × size × num_chunks) cell runs the same `SolvePlan` through
+`ChunkedPartitionSolver` and reports best-of-reps latency and solves/sec,
+fp64-oracle-checked against per-system Thomas. On this CPU container the
+Pallas backend runs in interpret mode — the numbers demonstrate the wiring
+and parity, not kernel speed; on a TPU host the identical sweep compares the
+Mosaic-compiled kernels against the jnp stages.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run --only backend_throughput
+  PYTHONPATH=src python -m benchmarks.backend_throughput --smoke   # CI gate
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.tridiag.chunked import ChunkedPartitionSolver
+from repro.core.tridiag.plan import BACKENDS
+from repro.core.tridiag.reference import make_diag_dominant_system, thomas_numpy
+
+
+def backend_throughput(
+    sizes=(2_000, 20_000, 100_000),
+    chunk_counts=(1, 2, 4, 8),
+    backends=tuple(BACKENDS),
+    *,
+    m: int = 10,
+    reps: int = 3,
+    tol: float = 1e-10,
+):
+    """best-of-reps latency + solves/sec per (backend, size, num_chunks) cell.
+
+    Every cell's solution is checked against the fp64 ``thomas_numpy`` oracle
+    before it is timed; an off-oracle backend is a bug, not a data point.
+    """
+    # The paper's precision is FP64; scope the x64 flag to this bench so the
+    # LM benches in the same driver run keep default f32/bf16 promotion.
+    prev_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        return _backend_throughput(
+            sizes, chunk_counts, backends, m=m, reps=reps, tol=tol
+        )
+    finally:
+        jax.config.update("jax_enable_x64", prev_x64)
+
+
+def _backend_throughput(sizes, chunk_counts, backends, *, m, reps, tol):
+    header = [
+        "backend", "size", "num_chunks", "ms_per_solve", "solves_per_sec",
+        "max_rel_err",
+    ]
+    rows = []
+    for n in sizes:
+        dl, d, du, b, _ = make_diag_dominant_system(n, seed=0)
+        ref = thomas_numpy(dl, d, du, b)
+        for backend in backends:
+            for k in chunk_counts:
+                solver = ChunkedPartitionSolver(m=m, num_chunks=k, backend=backend)
+                x = solver.solve(dl, d, du, b)  # untimed warmup + oracle probe
+                err = float(np.max(np.abs(x - ref)) / (np.max(np.abs(ref)) + 1e-30))
+                if err > tol:
+                    raise RuntimeError(
+                        f"backend {backend!r} off fp64 oracle: "
+                        f"n={n} k={k} err={err:.2e}"
+                    )
+                best = np.inf
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    solver.solve(dl, d, du, b)
+                    best = min(best, time.perf_counter() - t0)
+                rows.append([
+                    backend, n, k, round(best * 1e3, 3), round(1.0 / best, 1),
+                    f"{err:.2e}",
+                ])
+    return header, rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny sweep (CI gate): every backend must pass the fp64 oracle",
+    )
+    args = ap.parse_args()
+
+    if args.smoke:
+        header, rows = backend_throughput(
+            sizes=(600,), chunk_counts=(1, 3), reps=1
+        )
+    else:
+        header, rows = backend_throughput()
+    print(",".join(str(h) for h in header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    if args.smoke:
+        covered = {r[0] for r in rows}
+        missing = set(BACKENDS) - covered
+        if missing:
+            raise SystemExit(f"smoke sweep missed backends: {sorted(missing)}")
+        print(f"SMOKE OK: {len(rows)} cells across backends {sorted(covered)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -46,12 +46,18 @@ def main() -> None:
     }
     slow = {}
     if not args.skip_slow:
-        from benchmarks import arch_steps, batched_throughput, ragged_throughput
+        from benchmarks import (
+            arch_steps,
+            backend_throughput,
+            batched_throughput,
+            ragged_throughput,
+        )
 
         slow = {
             "measured_chunked_solver": overlap_autotune.measured_chunked_solver,
             "batched_throughput": batched_throughput.batched_throughput,
             "ragged_throughput": ragged_throughput.ragged_throughput,
+            "backend_throughput": backend_throughput.backend_throughput,
             "arch_steps": arch_steps.arch_step_costs,
         }
     benches.update(slow)

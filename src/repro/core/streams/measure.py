@@ -34,11 +34,16 @@ def _measure_cell(
     trace/compile time never lands in the dataset (it used to skew the first
     repeat of small-n rows). The 'sum' of overlappable time is the Stage-1 +
     Stage-3 device time measured at num_chunks=1 (the no-streams profile,
-    exactly how the paper measured its Table-1 columns)."""
+    exactly how the paper measured its Table-1 columns). Both baseline
+    quantities — the serial total ``t_non`` and the overlappable ``sum`` —
+    come from the single best-total baseline rep: independent minima over
+    different reps would mix phases of mismatched runs and could drive the
+    Eq.-5 overhead negative."""
     run(1)  # untimed warmup
     base_timings = [run(1) for _ in range(reps)]
-    t_non = min(t.t_total_ms for t in base_timings)
-    s = min(t.t_stage1_ms + t.t_stage3_ms for t in base_timings)
+    base_best = min(base_timings, key=lambda t: t.t_total_ms)
+    t_non = base_best.t_total_ms
+    s = base_best.t_stage1_ms + base_best.t_stage3_ms
     for k in candidates:
         if k == 1:
             continue
@@ -66,14 +71,19 @@ def measure_dataset(
     reps: int = 3,
     dtype=np.float64,
     seed: int = 0,
+    backend=None,
 ) -> StreamDataset:
-    """Wall-clock measurement campaign over (size × num_chunks)."""
+    """Wall-clock measurement campaign over (size × num_chunks).
+
+    ``backend`` selects the stage implementation being profiled (reference jnp
+    stages by default; ``"pallas"`` measures the kernel path), so one campaign
+    pipeline calibrates the heuristic for whichever backend will serve."""
     rows: List[Dict] = []
     for n in sizes:
         dl, d, du, b, _ = make_diag_dominant_system(n, seed=seed, dtype=dtype)
-        run = lambda k: ChunkedPartitionSolver(m=m, num_chunks=k).solve_timed(
-            dl, d, du, b
-        )[1]
+        run = lambda k: ChunkedPartitionSolver(
+            m=m, num_chunks=k, backend=backend
+        ).solve_timed(dl, d, du, b)[1]
         _measure_cell(
             rows, run, size=n, batch=None, candidates=candidates, reps=reps
         )
@@ -89,21 +99,22 @@ def measure_batched_dataset(
     reps: int = 3,
     dtype=np.float64,
     seed: int = 0,
+    backend=None,
 ) -> StreamDataset:
     """Wall-clock campaign over the 2-D (size × batch) grid.
 
     Each cell solves a batch of B independent size-n systems with the fused
-    `BatchedPartitionSolver`; rows carry the ``batch`` key consumed by
-    ``fit_batched_stream_heuristic``."""
+    `BatchedPartitionSolver` (on ``backend``); rows carry the ``batch`` key
+    consumed by ``fit_batched_stream_heuristic``."""
     rows: List[Dict] = []
     for n in sizes:
         for batch in batches:
             dl, d, du, b, _ = make_diag_dominant_system(
                 n, seed=seed, batch=(batch,), dtype=dtype
             )
-            run = lambda k: BatchedPartitionSolver(m=m, num_chunks=k).solve_timed(
-                dl, d, du, b
-            )[1]
+            run = lambda k: BatchedPartitionSolver(
+                m=m, num_chunks=k, backend=backend
+            ).solve_timed(dl, d, du, b)[1]
             _measure_cell(
                 rows, run, size=n, batch=batch, candidates=candidates, reps=reps
             )
@@ -118,13 +129,14 @@ def measure_ragged_dataset(
     reps: int = 3,
     dtype=np.float64,
     seed: int = 0,
+    backend=None,
 ) -> StreamDataset:
     """Wall-clock campaign over ragged mixed-size batches.
 
     Each cell fuses one *mix* — a tuple of heterogeneous system sizes — into a
-    single `RaggedPartitionSolver` solve and sweeps the chunk candidates. Rows
-    carry ``size = Σ nᵢ`` (the effective size the heuristic prices ragged
-    batches by) and the originating ``mix``, so the same
+    single `RaggedPartitionSolver` solve (on ``backend``) and sweeps the chunk
+    candidates. Rows carry ``size = Σ nᵢ`` (the effective size the heuristic
+    prices ragged batches by) and the originating ``mix``, so the same
     ``fit_batched_stream_heuristic`` pipeline consumes them unchanged."""
     rows: List[Dict] = []
     for mix in mixes:
@@ -133,9 +145,9 @@ def measure_ragged_dataset(
             make_diag_dominant_system(n, seed=seed + i, dtype=dtype)[:4]
             for i, n in enumerate(mix)
         ]
-        run = lambda k: RaggedPartitionSolver(m=m, num_chunks=k).solve_timed(
-            systems
-        )[1]
+        run = lambda k: RaggedPartitionSolver(
+            m=m, num_chunks=k, backend=backend
+        ).solve_timed(systems)[1]
         _measure_cell(
             rows, run, size=sum(mix), batch=None, candidates=candidates,
             reps=reps, mix=mix,

@@ -36,8 +36,11 @@ Plan/execute architecture
 -------------------------
 `plan.py` is the single execution path: an immutable ``SolvePlan`` (fused
 block layout, chunk bounds, halo map, per-system offsets; chunk count from a
-pluggable ``ChunkPolicy``) executed by a stateless ``PlanExecutor`` whose
-jitted stage callables are cached module-wide. ``ChunkedPartitionSolver``,
+pluggable ``ChunkPolicy``) executed by a ``PlanExecutor`` whose stage
+callables are cached module-wide per ``(m, backend)`` — the stage
+implementation is itself pluggable (``ReferenceBackend`` jnp stages,
+``PallasBackend`` kernels), and plans are memoised by their
+``(sizes, m, num_chunks)`` signature. ``ChunkedPartitionSolver``,
 ``BatchedPartitionSolver`` and `ragged.py`'s ``RaggedPartitionSolver`` are
 thin frontends that only build plans. `ragged.py` fuses *mixed-size* systems
 into one block axis (exact decoupling via zeroed boundary couplings), so one
@@ -47,7 +50,9 @@ size ``Σ nᵢ`` through the stream heuristic::
     from repro.core.tridiag import RaggedPartitionSolver, build_plan
 
     plan = build_plan((200, 1000, 5000), m=10, policy=HeuristicChunkPolicy(h))
-    xs = RaggedPartitionSolver(m=10, policy=HeuristicChunkPolicy(h)).solve(systems)
+    xs = RaggedPartitionSolver(
+        m=10, policy=HeuristicChunkPolicy(h), backend="pallas"
+    ).solve(systems)
 """
 
 from repro.core.tridiag.thomas import thomas, thomas_factor, thomas_solve_factored
@@ -65,15 +70,23 @@ from repro.core.tridiag.reference import (
     tridiag_to_dense,
 )
 from repro.core.tridiag.plan import (
+    BACKENDS,
     ChunkPolicy,
     ChunkTiming,
     FixedChunkPolicy,
     HeuristicChunkPolicy,
+    PallasBackend,
     PlanExecutor,
+    ReferenceBackend,
     SolvePlan,
+    StageBackend,
     build_plan,
+    clear_plan_cache,
     effective_size,
     jitted_stages,
+    plan_cache_stats,
+    price_chunks,
+    resolve_backend,
 )
 from repro.core.tridiag.chunked import ChunkedPartitionSolver
 from repro.core.tridiag.batched import (
@@ -103,15 +116,23 @@ __all__ = [
     "thomas_numpy",
     "tridiag_matvec",
     "tridiag_to_dense",
+    "BACKENDS",
     "ChunkPolicy",
     "ChunkTiming",
     "FixedChunkPolicy",
     "HeuristicChunkPolicy",
+    "PallasBackend",
     "PlanExecutor",
+    "ReferenceBackend",
     "SolvePlan",
+    "StageBackend",
     "build_plan",
+    "clear_plan_cache",
     "effective_size",
     "jitted_stages",
+    "plan_cache_stats",
+    "price_chunks",
+    "resolve_backend",
     "ChunkedPartitionSolver",
     "BatchedPartitionSolver",
     "solve_batched",

@@ -115,15 +115,17 @@ class BatchedPartitionSolver:
 
     Thin frontend over the plan layer: the batch is fused by concatenation and
     laid out as a ``(n,)*B`` `SolvePlan`; chunk bounds and halo handling live
-    in `repro.core.tridiag.plan.PlanExecutor`.
+    in `repro.core.tridiag.plan.PlanExecutor`. ``backend`` picks the stage
+    implementation (``"reference"`` jnp stages, ``"pallas"`` kernels, or a
+    :class:`~repro.core.tridiag.plan.StageBackend` instance).
     """
 
-    def __init__(self, m: int = 10, num_chunks: int = 1):
+    def __init__(self, m: int = 10, num_chunks: int = 1, *, backend=None):
         if num_chunks < 1:
             raise ValueError("num_chunks must be >= 1")
         self.m = m
         self.num_chunks = num_chunks
-        self._executor = PlanExecutor()
+        self._executor = PlanExecutor(backend=backend)
 
     def solve(
         self, dl: np.ndarray, d: np.ndarray, du: np.ndarray, b: np.ndarray

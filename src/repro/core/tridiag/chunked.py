@@ -36,15 +36,17 @@ class ChunkedPartitionSolver:
 
     ``num_chunks`` plays the role of the paper's ``num_str``: 1 reproduces the
     non-streamed execution (Eq. 1); larger values overlap staging and compute
-    (Eq. 2) at the price of per-chunk dispatch overhead.
+    (Eq. 2) at the price of per-chunk dispatch overhead. ``backend`` picks the
+    stage implementation (``"reference"`` jnp stages, ``"pallas"`` kernels, or
+    a :class:`~repro.core.tridiag.plan.StageBackend` instance).
     """
 
-    def __init__(self, m: int = 10, num_chunks: int = 1):
+    def __init__(self, m: int = 10, num_chunks: int = 1, *, backend=None):
         if num_chunks < 1:
             raise ValueError("num_chunks must be >= 1")
         self.m = m
         self.num_chunks = num_chunks
-        self._executor = PlanExecutor()
+        self._executor = PlanExecutor(backend=backend)
 
     def plan_for(self, n: int) -> SolvePlan:
         """The single-system plan this solver executes for size ``n``."""

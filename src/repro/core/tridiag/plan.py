@@ -20,12 +20,37 @@ chunk bounds, halo handling and ghost splicing live here and nowhere else.
 The chunk count is either given explicitly or chosen by a pluggable
 :class:`ChunkPolicy` — :class:`FixedChunkPolicy` or
 :class:`HeuristicChunkPolicy`, which prices a (possibly ragged) batch by its
-*effective size* ``Σ nᵢ`` through a fitted stream heuristic.
+*effective size* ``Σ nᵢ`` through a fitted stream heuristic
+(:func:`price_chunks` is the one pricing rule, shared with the serving path).
+
+Stage backends
+--------------
+*How* the device stages run is a second pluggable axis, orthogonal to the
+layout: a :class:`StageBackend` builds the stage-1/stage-3 callables the
+executor dispatches per chunk. :class:`ReferenceBackend` (the default) jits
+the pure-jnp ``partition.partition_stage{1,3}``; :class:`PallasBackend`
+routes through the Pallas TPU kernels
+(``repro.kernels.partition_stage{1,3}``), using their batched-grid variants
+when the fused operands carry a leading batch axis. On this CPU container the
+Pallas kernels run in interpret mode (``repro.kernels.common
+.interpret_default``), so every planned path — single, batched, ragged,
+serving — exercises the real kernel bodies under tier-1. Solvers and services
+accept ``backend=`` (an instance or the registry names ``"reference"`` /
+``"pallas"``); the jitted stages are cached module-wide per ``(m, backend)``.
+
+Plan cache
+----------
+``build_plan`` memoises plans by their ``(sizes, m, num_chunks)`` signature
+(bounded LRU): serving traffic repeats batch compositions, and a plan is a
+pure function of its signature, so repeated dispatches skip replanning.
+``plan_cache_stats()`` / ``clear_plan_cache()`` expose hit/miss counters for
+tests and capacity planning.
 """
 
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -68,28 +93,185 @@ def effective_size(sizes: Sizes) -> int:
     return int(sum(int(n) for n in sizes))
 
 
+# ------------------------------------------------------------ stage backends --
+class StageBackend:
+    """How the executor's device stages are implemented.
+
+    A backend builds the two callables `PlanExecutor` dispatches per chunk:
+    ``make_stage1(m)`` returns ``(dl, d, du, b) -> PartitionCoeffs`` and
+    ``make_stage3()`` returns ``(coeffs, s) -> x`` (back-substitution needs no
+    block size) — both shape-polymorphic over an optional leading batch axis,
+    both safe to call per chunk (jitted or wrapping jitted kernels). Backends
+    must be hashable (frozen dataclasses): they key the module-level stage
+    cache together with ``m``.
+    """
+
+    name = "abstract"
+
+    def make_stage1(self, m: int) -> Callable:
+        raise NotImplementedError
+
+    def make_stage3(self) -> Callable:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class ReferenceBackend(StageBackend):
+    """Jitted pure-jnp stages (``partition.partition_stage{1,3}``)."""
+
+    name = "reference"
+
+    def make_stage1(self, m: int) -> Callable:
+        return jax.jit(partial(partition.partition_stage1, m=m))
+
+    def make_stage3(self) -> Callable:
+        return jax.jit(partition.partition_stage3)
+
+
+@dataclass(frozen=True)
+class PallasBackend(StageBackend):
+    """Pallas TPU kernel stages (`repro.kernels.partition_stage{1,3}`).
+
+    Chunk operands with a leading batch axis route to the batched-grid kernel
+    variants; 1-D fused operands (the single/batched/ragged fusion paths) use
+    the single-system grid. ``interpret=None`` defers to
+    ``repro.kernels.common.interpret_default()`` — interpret mode off-TPU, so
+    the same backend object serves CPU tests and TPU runs.
+    """
+
+    name = "pallas"
+    block_p: int = 512
+    interpret: Optional[bool] = None
+
+    def make_stage1(self, m: int) -> Callable:
+        # Imported lazily: the kernel ops import repro.core.tridiag.partition,
+        # whose package __init__ imports this module.
+        from repro.kernels.partition_stage1.ops import (
+            partition_stage1_pallas,
+            partition_stage1_pallas_batched,
+        )
+
+        def stage1(dl, d, du, b):
+            ndim = jnp.asarray(d).ndim
+            kw = dict(m=m, block_p=self.block_p, interpret=self.interpret)
+            if ndim == 1:
+                return partition_stage1_pallas(dl, d, du, b, **kw)
+            if ndim == 2:
+                return partition_stage1_pallas_batched(dl, d, du, b, **kw)
+            raise ValueError(
+                f"PallasBackend stage 1 takes (n,) or (batch, n) operands, "
+                f"got {ndim}-D"
+            )
+
+        return stage1
+
+    def make_stage3(self) -> Callable:
+        from repro.kernels.partition_stage3.ops import (
+            partition_stage3_pallas,
+            partition_stage3_pallas_batched,
+        )
+
+        def stage3(coeffs, s):
+            # The host reduced solve is fp64 (oracle of record); the jnp
+            # reference stage promotes silently, but kernel refs are typed —
+            # back-substitution runs in the spikes' precision.
+            s = jnp.asarray(s, dtype=jnp.asarray(coeffs.y).dtype)
+            ndim = s.ndim
+            kw = dict(block_p=self.block_p, interpret=self.interpret)
+            if ndim == 1:
+                return partition_stage3_pallas(coeffs, s, **kw)
+            if ndim == 2:
+                return partition_stage3_pallas_batched(coeffs, s, **kw)
+            raise ValueError(
+                f"PallasBackend stage 3 takes (P,) or (batch, P) interface "
+                f"operands, got {ndim}-D"
+            )
+
+        return stage3
+
+
+#: Registry consulted when ``backend=`` is given as a string; keys are the
+#: backends' ``name`` attributes.
+BACKENDS: Dict[str, StageBackend] = {
+    b.name: b for b in (ReferenceBackend(), PallasBackend())
+}
+
+BackendLike = Union[StageBackend, str, None]
+
+
+def resolve_backend(backend: BackendLike) -> StageBackend:
+    """Normalise a ``backend=`` argument: None → reference, str → registry."""
+    if backend is None:
+        return BACKENDS["reference"]
+    if isinstance(backend, StageBackend):
+        return backend
+    if isinstance(backend, str):
+        try:
+            return BACKENDS[backend]
+        except KeyError:
+            raise ValueError(
+                f"unknown stage backend {backend!r}; known: {sorted(BACKENDS)}"
+            ) from None
+    raise TypeError(f"backend must be a StageBackend, name or None, got {backend!r}")
+
+
 # ------------------------------------------------------------ jitted stages --
-# Module-level cache of the jitted stage callables. Frontends and services
-# construct solver objects freely (one per chunk count, per request batch, per
-# sweep cell); tracing/compilation must not follow suit. The callables are
-# batch-polymorphic (leading dims pass through), so one cached stage-1 per
-# block size `m` — and a single stage-3, which takes no m — serves the single,
-# batched and ragged paths alike; jax.jit specialises per operand shape
-# internally.
-_STAGE1_CACHE: Dict[int, Callable] = {}
-_STAGE3_CACHE: List[Callable] = []
+# Module-level cache of the stage callables. Stage 1 is keyed by
+# (m, backend); stage 3 takes no block size, so one callable per backend
+# serves every m. Frontends and services construct solver objects freely (one
+# per chunk count, per request batch, per sweep cell); tracing/compilation
+# must not follow suit. The callables are batch-polymorphic (leading dims
+# pass through), so each cached pair serves the single, batched and ragged
+# paths alike; jax.jit specialises per operand shape internally.
+_STAGE1_CACHE: Dict[Tuple[int, StageBackend], Callable] = {}
+_STAGE3_CACHE: Dict[StageBackend, Callable] = {}
 
 
-def jitted_stages(m: int) -> Tuple[Callable, Callable]:
-    """Return the cached ``(stage1, stage3)`` jitted callables for block size m."""
-    if m not in _STAGE1_CACHE:
-        _STAGE1_CACHE[m] = jax.jit(partial(partition.partition_stage1, m=m))
-    if not _STAGE3_CACHE:
-        _STAGE3_CACHE.append(jax.jit(partition.partition_stage3))
-    return _STAGE1_CACHE[m], _STAGE3_CACHE[0]
+def jitted_stages(m: int, backend: BackendLike = None) -> Tuple[Callable, Callable]:
+    """Return the cached ``(stage1, stage3)`` callables for ``(m, backend)``."""
+    backend = resolve_backend(backend)
+    key = (m, backend)
+    if key not in _STAGE1_CACHE:
+        _STAGE1_CACHE[key] = backend.make_stage1(m)
+    if backend not in _STAGE3_CACHE:
+        _STAGE3_CACHE[backend] = backend.make_stage3()
+    return _STAGE1_CACHE[key], _STAGE3_CACHE[backend]
 
 
 # ------------------------------------------------------------ chunk policies --
+def price_chunks(heuristic, sizes: Sizes, *, fp32: bool = False) -> int:
+    """THE chunk-pricing rule: one heuristic call for every entry point.
+
+    `HeuristicChunkPolicy` and `serve.solve.BatchedSolveService` both route
+    through here, so a batch can never get a different chunk count depending
+    on whether it arrives via a plan policy or the serving queue. Heuristics
+    exposing ``predict_optimum_ragged`` (the batched/ragged-aware pricing) are
+    preferred; plain 1-D heuristics are priced at the batch's effective size
+    ``Σ nᵢ``. The paper's FP32 rule (§3.2: halve the FP64 optimum) applies on
+    top of either path. The result is clamped to ``>= 1`` here — a fitted
+    heuristic can round to 0 on tiny effective sizes, and the serving queue
+    passes this pick to ``build_plan`` as an *explicit* count, which is
+    strict by contract.
+    """
+    if isinstance(sizes, (int, np.integer)):
+        sizes = (int(sizes),)
+    sizes = tuple(int(n) for n in sizes)
+    if fp32 and hasattr(heuristic, "predict_optimum_fp32"):
+        # The heuristic's own FP32 rule wins (at the batch's effective size);
+        # the halving below is only the fallback for ragged-aware heuristics
+        # that never fitted one.
+        k = int(heuristic.predict_optimum_fp32(float(effective_size(sizes))))
+    elif hasattr(heuristic, "predict_optimum_ragged"):
+        k = int(heuristic.predict_optimum_ragged(sizes))
+        if fp32:
+            k //= 2
+    else:
+        k = int(heuristic.predict_optimum(float(effective_size(sizes))))
+        if fp32:
+            k //= 2
+    return max(1, k)
+
+
 class ChunkPolicy:
     """Strategy choosing the chunk ("virtual stream") count for a plan.
 
@@ -115,20 +297,19 @@ class FixedChunkPolicy(ChunkPolicy):
 class HeuristicChunkPolicy(ChunkPolicy):
     """Price the batch by its effective size through a fitted heuristic.
 
-    Accepts either a 1-D ``StreamHeuristic`` or a ``BatchedStreamHeuristic``
-    (both expose ``predict_optimum``); the feature handed to the model is
-    ``effective_size(sizes)``, so ragged mixed-size batches are priced exactly
-    like the same-size fused batch with the same total element count.
+    Accepts either a 1-D ``StreamHeuristic`` or a ``BatchedStreamHeuristic``;
+    the pricing is delegated to :func:`price_chunks` (shared with the serving
+    queue), which prefers ``predict_optimum_ragged`` and otherwise prices the
+    batch at its effective size ``effective_size(sizes)`` — so ragged
+    mixed-size batches are priced exactly like the same-size fused batch with
+    the same total element count, whichever entry point they arrive through.
     """
 
     heuristic: object
     fp32: bool = False
 
     def num_chunks(self, sizes: Tuple[int, ...], m: int) -> int:
-        eff = float(effective_size(sizes))
-        if self.fp32:
-            return int(self.heuristic.predict_optimum_fp32(eff))
-        return int(self.heuristic.predict_optimum(eff))
+        return price_chunks(self.heuristic, sizes, fp32=self.fp32)
 
 
 # ----------------------------------------------------------------- the plan --
@@ -171,6 +352,29 @@ class SolvePlan:
         return self.total_size
 
 
+# ------------------------------------------------------------- plan cache --
+# Plans are pure functions of their (sizes, m, num_chunks) signature, and
+# serving traffic repeats batch compositions (same mix of request sizes →
+# identical fused layout), so build_plan memoises them in a bounded LRU. The
+# capacity bounds memory for adversarial traffic with no repeated mixes;
+# 1024 distinct compositions is far beyond any steady-state queue.
+_PLAN_CACHE_CAPACITY = 1024
+_PLAN_CACHE: "OrderedDict[Tuple[Tuple[int, ...], int, int], SolvePlan]" = OrderedDict()
+_PLAN_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats() -> Dict[str, int]:
+    """Hit/miss counters of the build_plan memo (plus its current size)."""
+    return {**_PLAN_STATS, "size": len(_PLAN_CACHE)}
+
+
+def clear_plan_cache() -> None:
+    """Empty the plan memo and reset its counters (test isolation hook)."""
+    _PLAN_CACHE.clear()
+    _PLAN_STATS["hits"] = 0
+    _PLAN_STATS["misses"] = 0
+
+
 def build_plan(
     sizes: Sizes,
     m: int = 10,
@@ -183,8 +387,17 @@ def build_plan(
     ``sizes`` is one int (single solve) or a sequence (fused batch, possibly
     ragged). Exactly one of ``num_chunks``/``policy`` may be given; with
     neither, the plan is unchunked (``num_chunks=1``). The chunk count is
-    clamped to the fused block count, and blocks are split as evenly as
-    possible (remainder blocks go to the leading chunks).
+    clamped into ``[1, num_blocks]`` — in particular a :class:`ChunkPolicy`
+    may legitimately round to 0 on tiny effective sizes (a fitted heuristic's
+    Eq.-6 sweep near the origin) and is clamped up rather than rejected, so a
+    policy pick can never kill a dispatch. An *explicit* ``num_chunks < 1``
+    is still a caller error. Blocks are split as evenly as possible
+    (remainder blocks go to the leading chunks).
+
+    Plans are memoised by their ``(sizes, m, num_chunks)`` signature in a
+    bounded module-level LRU (policies are consulted first, then the resolved
+    count keys the cache), so serving traffic that repeats a batch
+    composition skips replanning; see :func:`plan_cache_stats`.
     """
     if isinstance(sizes, (int, np.integer)):
         sizes = (int(sizes),)
@@ -199,14 +412,25 @@ def build_plan(
     if num_chunks is not None and policy is not None:
         raise ValueError("pass num_chunks or policy, not both")
     if policy is not None:
-        k = policy.num_chunks(sizes, m)
+        # Clamp the policy's pick into [1, num_blocks] exactly like the upper
+        # bound below: heuristics may round to 0 on tiny effective sizes.
+        k = max(1, int(policy.num_chunks(sizes, m)))
     else:
-        k = 1 if num_chunks is None else num_chunks
-    if k < 1:
-        raise ValueError("num_chunks must be >= 1")
+        k = 1 if num_chunks is None else int(num_chunks)
+        if k < 1:
+            raise ValueError("num_chunks must be >= 1")
 
     num_blocks = sum(sizes) // m
-    k = min(int(k), num_blocks)
+    k = min(k, num_blocks)
+
+    key = (sizes, m, k)
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        _PLAN_CACHE.move_to_end(key)
+        _PLAN_STATS["hits"] += 1
+        return cached
+    _PLAN_STATS["misses"] += 1
+
     chunk_sizes = [num_blocks // k + (1 if i < num_blocks % k else 0) for i in range(k)]
     bounds: List[Tuple[int, int]] = []
     start = 0
@@ -218,24 +442,35 @@ def build_plan(
     offsets = [0]
     for n in sizes:
         offsets.append(offsets[-1] + n)
-    return SolvePlan(
+    plan = SolvePlan(
         m=m,
         sizes=sizes,
         chunk_bounds=tuple(bounds),
         halo_bounds=halos,
         offsets=tuple(offsets),
     )
+    _PLAN_CACHE[key] = plan
+    while len(_PLAN_CACHE) > _PLAN_CACHE_CAPACITY:
+        _PLAN_CACHE.popitem(last=False)
+    return plan
 
 
 # -------------------------------------------------------------- the executor --
 class PlanExecutor:
     """Runs stage-1 dispatch, host reduced solve and stage-3 from a plan.
 
-    Stateless: the jitted stage callables come from the module-level cache, so
-    executors (and the frontends that own them) are free to construct.
-    Operands are the *fused* diagonals/RHS — 1-D over ``plan.total_size``, or
-    with extra leading dims that pass straight through the stages.
+    ``backend`` (a :class:`StageBackend`, a registry name, or None for the
+    reference stages) decides *how* the chunked device stages execute; the
+    executor itself carries no mutable state — the stage callables come from
+    the module-level ``(m, backend)`` cache, so executors (and the frontends
+    that own them) are free to construct. Operands are the *fused*
+    diagonals/RHS — 1-D over ``plan.total_size``, or with extra leading dims
+    that pass straight through the stages (on `PallasBackend` a single
+    leading batch axis routes to the batched-grid kernels).
     """
+
+    def __init__(self, backend: BackendLike = None):
+        self.backend = resolve_backend(backend)
 
     def execute(
         self,
@@ -252,7 +487,7 @@ class PlanExecutor:
                 f"operands have {n} rows but the plan lays out {plan.total_size}"
             )
         row = lambda a, lo, hi: np.asarray(a)[..., lo * m : hi * m]
-        stage1, stage3 = jitted_stages(m)
+        stage1, stage3 = jitted_stages(m, self.backend)
 
         t0 = time.perf_counter()
         # ---- Stage 1: dispatch every chunk without blocking (the "streams").

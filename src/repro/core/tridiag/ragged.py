@@ -26,6 +26,12 @@ The heuristic prices a ragged batch by its **effective size** ``Σ nᵢ``
 the device with one ``Σ nᵢ``-element workload, the exact ragged analogue of
 the same-size campaign's ``n·B`` feature.
 
+:func:`fuse_ragged` validates every system up front — the four diagonals of a
+system must be 1-D and equally long, and a malformed request is rejected with
+its batch index. (Silently fusing a short diagonal would shift every
+subsequent system's rows and corrupt *all* their solutions, which is fatal in
+the serving path where one bad request rides with innocent neighbours.)
+
 API example::
 
     from repro.core.tridiag.ragged import RaggedPartitionSolver, solve_ragged
@@ -35,6 +41,10 @@ API example::
 
     solver = RaggedPartitionSolver(m=10, policy=HeuristicChunkPolicy(heur))
     xs, timing = solver.solve_timed(systems)
+
+Like every planned frontend, the solver takes ``backend=`` to pick the stage
+implementation — ``"pallas"`` drives the ragged fused layout through the
+Pallas stage-1/stage-3 kernels (`repro.core.tridiag.plan.PallasBackend`).
 """
 
 from __future__ import annotations
@@ -79,7 +89,7 @@ def fuse_ragged(
         raise ValueError("fuse_ragged needs at least one system")
     dls, ds, dus, bs = [], [], [], []
     sizes: List[int] = []
-    for dl, d, du, b in systems:
+    for i, (dl, d, du, b) in enumerate(systems):
         dl = np.array(dl, copy=True)
         du = np.array(du, copy=True)
         d = np.asarray(d)
@@ -88,6 +98,15 @@ def fuse_ragged(
             raise ValueError(
                 f"ragged fusion takes 1-D systems, got shape {d.shape}"
             )
+        # One short/long diagonal would shift every subsequent system in the
+        # fused arrays and silently corrupt all their solutions — reject the
+        # offending system by index instead.
+        for name, a in (("dl", dl), ("du", du), ("b", b)):
+            if a.shape != d.shape:
+                raise ValueError(
+                    f"system {i}: {name} has shape {a.shape} but d has "
+                    f"shape {d.shape}; all four diagonals must be equally long"
+                )
         dl[0] = 0.0
         du[-1] = 0.0
         sizes.append(d.shape[0])
@@ -116,7 +135,9 @@ class RaggedPartitionSolver:
     ``policy`` (a :class:`~repro.core.tridiag.plan.ChunkPolicy`) prices each
     batch by effective size at solve time; a fixed ``num_chunks`` is the
     no-policy baseline. Chunks slice the fused block axis, so they span system
-    boundaries exactly as in the same-size batched solver.
+    boundaries exactly as in the same-size batched solver. ``backend`` picks
+    the stage implementation (``"reference"``/``"pallas"`` or a
+    :class:`~repro.core.tridiag.plan.StageBackend` instance).
     """
 
     def __init__(
@@ -125,6 +146,7 @@ class RaggedPartitionSolver:
         num_chunks: int = 1,
         *,
         policy: Optional[ChunkPolicy] = None,
+        backend=None,
     ):
         if num_chunks < 1:
             raise ValueError("num_chunks must be >= 1")
@@ -133,7 +155,7 @@ class RaggedPartitionSolver:
         self.m = m
         self.num_chunks = num_chunks
         self.policy = policy
-        self._executor = PlanExecutor()
+        self._executor = PlanExecutor(backend=backend)
 
     def plan_for(self, sizes: Sequence[int]) -> SolvePlan:
         if self.policy is not None:
@@ -159,8 +181,9 @@ def solve_ragged(
     m: int = 10,
     num_chunks: int = 1,
     policy: Optional[ChunkPolicy] = None,
+    backend=None,
 ) -> List[np.ndarray]:
     """One-shot ragged fused solve; returns the per-system solutions."""
-    return RaggedPartitionSolver(m=m, num_chunks=num_chunks, policy=policy).solve(
-        systems
-    )
+    return RaggedPartitionSolver(
+        m=m, num_chunks=num_chunks, policy=policy, backend=backend
+    ).solve(systems)

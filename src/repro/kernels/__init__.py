@@ -17,13 +17,21 @@ that the paper tunes.
 """
 
 from repro.kernels.thomas.ops import thomas_pallas
-from repro.kernels.partition_stage1.ops import partition_stage1_pallas
-from repro.kernels.partition_stage3.ops import partition_stage3_pallas
+from repro.kernels.partition_stage1.ops import (
+    partition_stage1_pallas,
+    partition_stage1_pallas_batched,
+)
+from repro.kernels.partition_stage3.ops import (
+    partition_stage3_pallas,
+    partition_stage3_pallas_batched,
+)
 from repro.kernels.tridiag_matvec.ops import tridiag_matvec_pallas
 
 __all__ = [
     "thomas_pallas",
     "partition_stage1_pallas",
+    "partition_stage1_pallas_batched",
     "partition_stage3_pallas",
+    "partition_stage3_pallas_batched",
     "tridiag_matvec_pallas",
 ]

@@ -1,3 +1,6 @@
-from repro.kernels.partition_stage1.ops import partition_stage1_pallas
+from repro.kernels.partition_stage1.ops import (
+    partition_stage1_pallas,
+    partition_stage1_pallas_batched,
+)
 
-__all__ = ["partition_stage1_pallas"]
+__all__ = ["partition_stage1_pallas", "partition_stage1_pallas_batched"]

@@ -1,6 +1,13 @@
 from repro.kernels.partition_stage3.ops import (
     partition_solve_pallas,
+    partition_solve_pallas_batched,
     partition_stage3_pallas,
+    partition_stage3_pallas_batched,
 )
 
-__all__ = ["partition_stage3_pallas", "partition_solve_pallas"]
+__all__ = [
+    "partition_stage3_pallas",
+    "partition_stage3_pallas_batched",
+    "partition_solve_pallas",
+    "partition_solve_pallas_batched",
+]

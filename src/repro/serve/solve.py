@@ -47,7 +47,12 @@ import numpy as np
 
 from repro.core.autotune.heuristic import BatchedStreamHeuristic
 from repro.core.tridiag.batched import solve_batched
-from repro.core.tridiag.plan import PlanExecutor, build_plan, effective_size
+from repro.core.tridiag.plan import (
+    PlanExecutor,
+    build_plan,
+    effective_size,
+    price_chunks,
+)
 from repro.core.tridiag.ragged import fuse_ragged, split_ragged
 
 
@@ -114,6 +119,13 @@ class BatchedSolveService:
     ``clock`` (default ``time.perf_counter``) is injectable so deadline tests
     can drive virtual time; batch latency is always real wall time.
 
+    ``backend`` picks the stage implementation every dispatch runs on
+    (``"reference"`` jnp stages, ``"pallas"`` kernels, or a
+    :class:`~repro.core.tridiag.plan.StageBackend` instance); plans repeat per
+    batch composition and are memoised module-wide (the plan cache in
+    `repro.core.tridiag.plan`), so steady traffic neither replans nor
+    retraces.
+
     Stats: ``stats["batches"]/["systems"]/["wall_s"]`` aggregate throughput
     (``systems_per_sec``); ``stats["per_batch"]`` records one dict per
     dispatch with the batch composition, chunk count, solve latency and the
@@ -129,6 +141,7 @@ class BatchedSolveService:
         default_chunks: int = 1,
         admission: Optional[AdmissionPolicy] = None,
         clock: Callable[[], float] = time.perf_counter,
+        backend=None,
     ):
         if admission is None:
             # Legacy construction: submit only enqueues; batches form when
@@ -147,7 +160,7 @@ class BatchedSolveService:
         self.m = m
         self.default_chunks = default_chunks
         self._clock = clock
-        self._executor = PlanExecutor()
+        self._executor = PlanExecutor(backend=backend)
         self._queue: List[_Pending] = []
         self._results: Dict[int, np.ndarray] = {}
         self.stats = {"batches": 0, "systems": 0, "wall_s": 0.0, "per_batch": []}
@@ -173,13 +186,13 @@ class BatchedSolveService:
 
     def pick_chunks_ragged(self, sizes: Sequence[int]) -> int:
         """Chunk count for any dispatch, priced by its effective size Σ nᵢ
-        (same-size batches are the ``(n,)*B`` special case — one pricing rule,
-        shared with `repro.core.tridiag.plan.HeuristicChunkPolicy`)."""
+        (same-size batches are the ``(n,)*B`` special case). Delegates to
+        `repro.core.tridiag.plan.price_chunks` — the *same* rule
+        `HeuristicChunkPolicy` applies, so a batch gets one chunk count no
+        matter which entry point prices it."""
         if self.heuristic is None:
             return self.default_chunks
-        if hasattr(self.heuristic, "predict_optimum_ragged"):
-            return self.heuristic.predict_optimum_ragged(tuple(sizes))
-        return self.heuristic.predict_optimum(effective_size(sizes))
+        return price_chunks(self.heuristic, tuple(sizes))
 
     # -- admission -----------------------------------------------------------
     def _deadline_expired(self, now: float) -> bool:

@@ -1,0 +1,64 @@
+"""Tests for the wall-clock measurement campaign plumbing (`_measure_cell`):
+the Eq.-5 baseline phases must come from one coherent rep, and the campaigns
+thread the stage backend through to the solvers they time."""
+
+import numpy as np
+
+from repro.core.tridiag import ensure_x64
+
+ensure_x64()
+
+from repro.core.streams.measure import _measure_cell, measure_dataset  # noqa: E402
+from repro.core.tridiag.plan import ChunkTiming  # noqa: E402
+
+
+def _timing(k, total, s1, s3, n=600):
+    return ChunkTiming(
+        num_chunks=k,
+        t_stage1_ms=s1,
+        t_stage2_ms=total - s1 - s3,
+        t_stage3_ms=s3,
+        t_total_ms=total,
+        n=n,
+    )
+
+
+def test_measure_cell_baseline_phases_come_from_single_best_rep():
+    """Regression: t_non and sum were independent minima over *different*
+    baseline reps, so Eq. 5 could combine phases of mismatched runs and go
+    negative. Both must come from the single best-total rep."""
+    # Baseline reps: the best-total rep (10ms) has stage sum 8; a slower rep
+    # (12ms) happens to have a tiny stage sum (2). The old code paired
+    # t_non=10 with s=2.
+    schedule = {
+        1: [_timing(1, 11.0, 5.0, 5.0),   # warmup, discarded
+            _timing(1, 10.0, 4.0, 4.0),   # best total, s = 8
+            _timing(1, 12.0, 1.0, 1.0)],  # worse total, s = 2
+        2: [_timing(2, 9.0, 3.0, 3.0),    # warmup, discarded
+            _timing(2, 8.5, 3.0, 3.0),
+            _timing(2, 8.5, 3.0, 3.0)],
+    }
+
+    def run(k):
+        return schedule[k].pop(0)
+
+    rows = []
+    _measure_cell(rows, run, size=600, batch=None, candidates=(1, 2), reps=2)
+    assert len(rows) == 2
+    for row in rows:
+        assert row["t_non_str"] == 10.0
+        assert row["sum"] == 8.0  # the best rep's phases, not the cross-rep min
+        # Eq. 5: (8.5 - 10) + (1/2)*8 = 2.5 — the mismatched pairing
+        # ((8.5 - 10) + (1/2)*2 = -0.5) went negative.
+        assert row["t_overhead"] == (8.5 - 10.0) + 0.5 * 8.0
+        assert row["t_overhead"] >= 0.0
+
+
+def test_measure_dataset_runs_on_selected_backend():
+    """The campaign accepts backend= and still produces well-formed rows."""
+    data = measure_dataset((120,), candidates=(1, 2), reps=1, backend="pallas")
+    assert data.rows
+    for row in data.rows:
+        assert row["size"] == 120
+        assert row["num_str"] == 2
+        assert np.isfinite(row["t_overhead"])

@@ -88,6 +88,19 @@ def test_fixed_chunk_policy():
     assert plan.num_chunks == 4
 
 
+def test_policy_pick_below_one_is_clamped_not_fatal():
+    """Regression: a fitted heuristic can round to 0 chunks on tiny effective
+    sizes; build_plan must clamp a *policy* pick into [1, num_blocks] instead
+    of raising and killing the dispatch (explicit num_chunks stays strict)."""
+    for bad_k in (0, -3):
+        plan = build_plan((60,), 10, policy=FixedChunkPolicy(bad_k))
+        assert plan.num_chunks == 1
+        assert plan.chunk_bounds == ((0, 6),)
+    # the explicit-count contract is unchanged
+    with pytest.raises(ValueError):
+        build_plan((60,), 10, num_chunks=0)
+
+
 def test_heuristic_chunk_policy_prices_by_effective_size():
     from repro.core.autotune.heuristic import fit_stream_heuristic
     from repro.core.streams import StreamSimulator

@@ -67,6 +67,21 @@ def test_fuse_ragged_rejects_bad_input():
         fuse_ragged([(dl, d, du, b)])  # 2-D operands
 
 
+@pytest.mark.parametrize("diag", ["dl", "du", "b"])
+def test_fuse_ragged_rejects_mismatched_diagonal_lengths(diag):
+    """Regression: one malformed request (a short/long diagonal) used to fuse
+    silently, shifting every subsequent system's rows and corrupting all their
+    solutions. It must be rejected, naming the offending system."""
+    good, bad, tail = _mk_systems((60, 120, 60))
+    idx = {"dl": 0, "du": 2, "b": 3}[diag]
+    bad = list(bad)
+    bad[idx] = bad[idx][:-1]  # one row short
+    with pytest.raises(ValueError) as exc:
+        fuse_ragged([good, tuple(bad), tail])
+    assert "system 1" in str(exc.value)
+    assert diag in str(exc.value)
+
+
 def test_fuse_ragged_promotes_mixed_dtypes():
     s32 = _mk_systems((60,), dtype=np.float32)[0]
     s64 = _mk_systems((120,), dtype=np.float64, seed0=1)[0]

@@ -77,6 +77,54 @@ def test_default_chunks_fallback_without_heuristic():
     assert svc.stats["per_batch"][0]["num_chunks"] == 3
 
 
+def test_chunk_pricing_identical_across_entry_points():
+    """Regression: the serving queue preferred ``predict_optimum_ragged``
+    while ``HeuristicChunkPolicy`` always called ``predict_optimum``, so the
+    same ragged batch could get a different chunk count depending on entry
+    point. Both now delegate to ``plan.price_chunks``."""
+    from repro.core.tridiag import HeuristicChunkPolicy
+
+    class SplitBrainHeuristic:
+        """Ragged-aware heuristic whose two methods deliberately disagree."""
+
+        def predict_optimum(self, size):
+            return 2
+
+        def predict_optimum_ragged(self, sizes):
+            return 4
+
+    h = SplitBrainHeuristic()
+    sizes = (60, 120, 60)
+    svc = BatchedSolveService(heuristic=h, m=10, max_batch=8)
+    policy_pick = HeuristicChunkPolicy(h).num_chunks(sizes, 10)
+    assert svc.pick_chunks_ragged(sizes) == policy_pick == 4
+    # and the same-size special case agrees too
+    assert svc.pick_chunks(60, 3) == HeuristicChunkPolicy(h).num_chunks((60,) * 3, 10)
+
+
+def test_zero_chunk_heuristic_pick_cannot_kill_a_dispatch():
+    """Regression: the serving queue feeds the heuristic's pick to build_plan
+    as an *explicit* num_chunks (strict by contract), so a heuristic rounding
+    to 0 on a tiny batch raised mid-dispatch and the already-dequeued
+    requests vanished. price_chunks now clamps to >= 1 for every entry
+    point."""
+
+    class ZeroPickHeuristic:
+        def predict_optimum(self, size):
+            return 0
+
+        def predict_optimum_ragged(self, sizes):
+            return 0
+
+    svc = BatchedSolveService(heuristic=ZeroPickHeuristic(), m=10, max_batch=4)
+    assert svc.pick_chunks_ragged((60,)) == 1
+    refs = {}
+    _submit(svc, 0, 60, refs)
+    out = svc.flush()  # used to raise ValueError and drop the request
+    assert _rel_err(out[0], refs[0]) < 1e-11
+    assert svc.stats["per_batch"][0]["num_chunks"] == 1
+
+
 def test_max_batch_and_admission_conflict_is_rejected():
     """max_batch lives inside the policy once one is passed; a conflicting
     ctor arg must not be silently ignored."""
