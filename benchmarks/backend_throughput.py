@@ -3,11 +3,13 @@
 The paper's throughput lives in the stage-1/stage-3 device kernels; this
 sweep makes the backend axis of the plan executor
 (`repro.core.tridiag.plan.StageBackend`) measurable: every
-(backend × size × num_chunks) cell runs the same `SolvePlan` through
-`ChunkedPartitionSolver` and reports best-of-reps latency and solves/sec,
-fp64-oracle-checked against per-system Thomas. On this CPU container the
-Pallas backend runs in interpret mode — the numbers demonstrate the wiring
-and parity, not kernel speed; on a TPU host the identical sweep compares the
+(backend × size × num_chunks) cell runs the same `SolvePlan` through a
+`TridiagSession` configured for that backend and reports best-of-reps
+latency and solves/sec, fp64-oracle-checked against per-system Thomas. The
+registry's ``"auto"`` entry rides along (resolving to the reference stages
+off-TPU, the Pallas kernels on a TPU host). On this CPU container the Pallas
+backend runs in interpret mode — the numbers demonstrate the wiring and
+parity, not kernel speed; on a TPU host the identical sweep compares the
 Mosaic-compiled kernels against the jnp stages.
 
 Usage:
@@ -22,7 +24,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core.tridiag.chunked import ChunkedPartitionSolver
+from repro.core.tridiag.api import SolverConfig, TridiagSession
 from repro.core.tridiag.plan import BACKENDS
 from repro.core.tridiag.reference import make_diag_dominant_system, thomas_numpy
 
@@ -63,9 +65,10 @@ def _backend_throughput(sizes, chunk_counts, backends, *, m, reps, tol):
         dl, d, du, b, _ = make_diag_dominant_system(n, seed=0)
         ref = thomas_numpy(dl, d, du, b)
         for backend in backends:
+            cfg = SolverConfig(m=m, backend=backend)
             for k in chunk_counts:
-                solver = ChunkedPartitionSolver(m=m, num_chunks=k, backend=backend)
-                x = solver.solve(dl, d, du, b)  # untimed warmup + oracle probe
+                session = TridiagSession(cfg.replace(num_chunks=k))
+                x = session.solve(dl, d, du, b)  # untimed warmup + oracle probe
                 err = float(np.max(np.abs(x - ref)) / (np.max(np.abs(ref)) + 1e-30))
                 if err > tol:
                     raise RuntimeError(
@@ -75,7 +78,7 @@ def _backend_throughput(sizes, chunk_counts, backends, *, m, reps, tol):
                 best = np.inf
                 for _ in range(reps):
                     t0 = time.perf_counter()
-                    solver.solve(dl, d, du, b)
+                    session.solve(dl, d, du, b)
                     best = min(best, time.perf_counter() - t0)
                 rows.append([
                     backend, n, k, round(best * 1e3, 3), round(1.0 / best, 1),

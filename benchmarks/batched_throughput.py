@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.core.autotune.heuristic import fit_batched_stream_heuristic
 from repro.core.streams.simulator import StreamSimulator
-from repro.core.tridiag.batched import BatchedPartitionSolver
+from repro.core.tridiag.api import SolverConfig, TridiagSession
 from repro.core.tridiag.reference import make_diag_dominant_system
 
 
@@ -43,17 +43,18 @@ def batched_throughput(
     header = ["size", "batch", "num_chunks", "ms_per_batch", "systems_per_sec",
               "heuristic_pick"]
     rows = []
+    cfg = SolverConfig(m=m, backend="reference")
     for n in sizes:
         for batch in batches:
             dl, d, du, b, _ = make_diag_dominant_system(n, seed=0, batch=(batch,))
             pick = heur.predict_optimum(n, batch)
             for k in chunk_counts:
-                solver = BatchedPartitionSolver(m=m, num_chunks=k)
-                solver.solve(dl, d, du, b)  # warm the jit caches
+                session = TridiagSession(cfg.replace(num_chunks=k))
+                session.solve_batched(dl, d, du, b)  # warm the jit caches
                 best = np.inf
                 for _ in range(reps):
                     t0 = time.perf_counter()
-                    solver.solve(dl, d, du, b)
+                    session.solve_batched(dl, d, du, b)
                     best = min(best, time.perf_counter() - t0)
                 rows.append([
                     n, batch, k, round(best * 1e3, 3),

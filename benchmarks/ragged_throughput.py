@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.core.autotune.heuristic import fit_batched_stream_heuristic
 from repro.core.streams.simulator import StreamSimulator
-from repro.core.tridiag.ragged import RaggedPartitionSolver
+from repro.core.tridiag.api import SolverConfig, TridiagSession
 from repro.core.tridiag.reference import make_diag_dominant_system, thomas_numpy
 
 
@@ -71,9 +71,10 @@ def _ragged_throughput(mixes, chunk_counts, *, m: int, reps: int):
         ]
         refs = [thomas_numpy(*s) for s in systems]
         pick = heur.predict_optimum_ragged(mix)
+        cfg = SolverConfig(m=m, backend="reference")
         for k in chunk_counts:
-            solver = RaggedPartitionSolver(m=m, num_chunks=k)
-            xs = solver.solve(systems)  # untimed warmup + correctness probe
+            session = TridiagSession(cfg.replace(num_chunks=k))
+            xs = session.solve_many(systems)  # untimed warmup + correctness probe
             err = max(
                 float(np.max(np.abs(x - r)) / (np.max(np.abs(r)) + 1e-30))
                 for x, r in zip(xs, refs)
@@ -85,7 +86,7 @@ def _ragged_throughput(mixes, chunk_counts, *, m: int, reps: int):
             best = np.inf
             for _ in range(reps):
                 t0 = time.perf_counter()
-                solver.solve(systems)
+                session.solve_many(systems)
                 best = min(best, time.perf_counter() - t0)
             rows.append([
                 "+".join(str(n) for n in mix), sum(mix), k,

@@ -6,6 +6,8 @@ Usage:
   PYTHONPATH=src python -m benchmarks.run                 # everything
   PYTHONPATH=src python -m benchmarks.run --only table4   # one bench
   PYTHONPATH=src python -m benchmarks.run --skip-slow     # skip wall-clock benches
+  PYTHONPATH=src python -m benchmarks.run --list          # registry (imports all
+                                                          # bench modules; CI gate)
 """
 
 from __future__ import annotations
@@ -26,6 +28,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--skip-slow", action="store_true")
+    ap.add_argument(
+        "--list",
+        action="store_true",
+        help="print the bench registry and exit (still imports every bench "
+        "module, so a broken public entry point fails here)",
+    )
     args = ap.parse_args()
 
     from benchmarks import overlap_autotune, paper_tables
@@ -45,7 +53,7 @@ def main() -> None:
         "prefetch_chunks": overlap_autotune.prefetch_chunks,
     }
     slow = {}
-    if not args.skip_slow:
+    if not args.skip_slow or args.list:
         from benchmarks import (
             arch_steps,
             backend_throughput,
@@ -61,6 +69,12 @@ def main() -> None:
             "arch_steps": arch_steps.arch_step_costs,
         }
     benches.update(slow)
+
+    if args.list:
+        for name in benches:
+            print(name)
+        print(f"# {len(benches)} benches registered")
+        return
 
     selected = {args.only: benches[args.only]} if args.only else benches
     for name, fn in selected.items():

@@ -7,15 +7,22 @@
 2. Eq. 4 linear regression for ``sum`` (3:1 shuffled split, R²/MSE).
 3. Eq. 7 curve-fit overhead models (small/big regimes).
 4. Eq. 6 selection vs the Gómez-Luna [6] baseline (Table 1/4 reproduction).
-5. The SAME pipeline on real wall-clock solves on THIS machine, driven
-   through the plan/execute engine: the fitted heuristic becomes a
-   ChunkPolicy, build_plan lays out chunk bounds/halos, PlanExecutor runs the
-   three stages — including one ragged mixed-size fused batch.
+5. The SAME pipeline on real wall-clock solves on THIS machine, through the
+   one front door: the fitted heuristic becomes the ChunkPolicy of a
+   SolverConfig, and a TridiagSession runs the planned solves — single,
+   ragged mixed-size, and async served traffic with deadline admission — so
+   one config object flows from autotune fit to serving.
 6. The generalized tuner picking gradient-bucket counts for the LM framework.
 """
 
 import numpy as np
 
+from repro.api import (
+    HeuristicChunkPolicy,
+    SolveRequest,
+    SolverConfig,
+    TridiagSession,
+)
 from repro.core.autotune.heuristic import (
     fit_stream_heuristic,
     gomez_luna_optimum,
@@ -25,8 +32,6 @@ from repro.core.streams.measure import measure_dataset
 from repro.core.streams.simulator import PAPER_SIZES, StreamSimulator
 from repro.core.streams.timemodel import sum_overlap
 from repro.core.tridiag import ensure_x64
-from repro.core.tridiag.plan import HeuristicChunkPolicy, PlanExecutor, build_plan
-from repro.core.tridiag.ragged import fuse_ragged, split_ragged
 from repro.core.tridiag.reference import make_diag_dominant_system, thomas_numpy
 
 
@@ -50,7 +55,7 @@ def main():
               f"gomez-luna[6]={gomez_luna_optimum(s):6.1f}")
     print(f"-> {hits}/{len(PAPER_SIZES)} exact (paper: 23/25)")
 
-    print("\n== 5) the same pipeline on REAL wall-clock solves (plan API) ==")
+    print("\n== 5) the same pipeline on REAL wall-clock solves (one front door) ==")
     ensure_x64()
     data = measure_dataset((20_000, 100_000, 400_000), (1, 2, 4, 8), reps=2)
     by_size = {}
@@ -62,30 +67,51 @@ def main():
         print(f"N={n:>8,}: best measured chunks on this host = {best[0]} "
               f"({best[1]:.2f} ms)")
 
-    # The fitted heuristic becomes the ChunkPolicy of a planned solve: the
-    # policy picks num_chunks from the effective size, build_plan lays out
-    # chunk bounds + halo map, and PlanExecutor runs the three stages.
-    policy = HeuristicChunkPolicy(heur)
-    executor = PlanExecutor()
-    plan = build_plan(400_000, m=10, policy=policy)
-    dl, d, du, b, _ = make_diag_dominant_system(400_000, seed=0)
-    _, timing = executor.execute(plan, dl, d, du, b)
-    print(f"planned solve: N=400,000 -> policy picked {plan.num_chunks} chunks, "
-          f"{timing.t_total_ms:.2f} ms wall")
-
-    # Ragged mixed-size fused batch: three heterogeneous systems, one plan.
-    mix = (200, 1_000, 5_000)
-    systems = [make_diag_dominant_system(n, seed=i)[:4] for i, n in enumerate(mix)]
-    rdl, rd, rdu, rb, sizes = fuse_ragged(systems)
-    rplan = build_plan(sizes, m=10, policy=policy)
-    x, timing = executor.execute(rplan, rdl, rd, rdu, rb)
-    err = max(
-        float(np.max(np.abs(xi - thomas_numpy(*s))))
-        for xi, s in zip(split_ragged(x, sizes), systems)
+    # The fitted heuristic becomes the ChunkPolicy of ONE SolverConfig; the
+    # session built from it runs every planned solve below — the policy picks
+    # num_chunks from the effective size, build_plan lays out chunk bounds +
+    # halo map, and the executor runs the three stages.
+    cfg = SolverConfig(
+        m=10, policy=HeuristicChunkPolicy(heur), backend="auto",
+        max_batch=8, max_wait_ms=5.0,
     )
-    print(f"ragged plan: sizes={sizes} -> effective {rplan.effective_size:,}, "
-          f"{rplan.num_chunks} chunks, {timing.t_total_ms:.2f} ms, "
-          f"max |err| vs per-system Thomas = {err:.2e}")
+    with TridiagSession(cfg) as session:
+        dl, d, du, b, _ = make_diag_dominant_system(400_000, seed=0)
+        _, timing = session.solve_timed(dl, d, du, b)
+        print(f"session solve: N=400,000 -> policy picked {timing.num_chunks} "
+              f"chunks, {timing.t_total_ms:.2f} ms wall")
+
+        # Ragged mixed-size fused batch: three heterogeneous systems, one plan.
+        mix = (200, 1_000, 5_000)
+        systems = [
+            make_diag_dominant_system(n, seed=i)[:4] for i, n in enumerate(mix)
+        ]
+        plan = session.plan_for(mix)
+        xs, timing = session.solve_many_timed(systems)
+        err = max(
+            float(np.max(np.abs(xi - thomas_numpy(*s))))
+            for xi, s in zip(xs, systems)
+        )
+        print(f"session solve_many: sizes={mix} -> effective "
+              f"{plan.effective_size:,}, {plan.num_chunks} chunks, "
+              f"{timing.t_total_ms:.2f} ms, "
+              f"max |err| vs per-system Thomas = {err:.2e}")
+
+        # Served traffic through the SAME config: submit returns futures and
+        # the session's worker dispatches at max_batch/the 5 ms deadline —
+        # autotune fit to serving, one object, no poll() anywhere.
+        futs = []
+        for rid, n in enumerate((200, 1_000, 5_000, 200, 1_000)):
+            system = make_diag_dominant_system(n, seed=10 + rid)[:4]
+            futs.append((system, session.submit(SolveRequest(rid, *system))))
+        err = max(
+            float(np.max(np.abs(fut.result(timeout=30.0) - thomas_numpy(*system))))
+            for system, fut in futs
+        )
+        pb = session.stats["per_batch"][-1]
+        print(f"served {len(futs)} requests in {session.stats['batches']} "
+              f"fused dispatch(es); last batch sizes={pb['sizes']} "
+              f"({pb['num_chunks']} chunks), max |err| = {err:.2e}")
 
     print("\n== 6) beyond the paper: gradient-bucket tuning (v5e pod) ==")
     for params_b, name in ((4e9, "qwen3-4b"), (340e9, "nemotron-340b")):

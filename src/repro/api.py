@@ -1,0 +1,43 @@
+"""Public front door: ``from repro.api import SolverConfig, TridiagSession``.
+
+Thin re-export of :mod:`repro.core.tridiag.api` — one frozen config naming
+the whole solve configuration, one session serving every batch shape
+(single, same-size batched, ragged, async with futures). See that module's
+docstring and the root README for the full tour.
+"""
+
+from repro.core.tridiag.api import (
+    BACKEND_NAMES,
+    AdmissionPolicy,
+    SolveEngine,
+    SolveFuture,
+    SolveRequest,
+    SolverConfig,
+    TridiagSession,
+)
+from repro.core.tridiag.plan import (
+    BACKENDS,
+    ChunkPolicy,
+    FixedChunkPolicy,
+    HeuristicChunkPolicy,
+    PallasBackend,
+    ReferenceBackend,
+    StageBackend,
+)
+
+__all__ = [
+    "AdmissionPolicy",
+    "BACKEND_NAMES",
+    "BACKENDS",
+    "ChunkPolicy",
+    "FixedChunkPolicy",
+    "HeuristicChunkPolicy",
+    "PallasBackend",
+    "ReferenceBackend",
+    "SolveEngine",
+    "SolveFuture",
+    "SolveRequest",
+    "SolverConfig",
+    "StageBackend",
+    "TridiagSession",
+]

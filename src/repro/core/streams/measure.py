@@ -1,7 +1,14 @@
 """Real wall-clock measurement path: run the chunked JAX partition solver on
 THIS machine and feed the same ML pipeline the simulator feeds (DESIGN.md §2.2
 — demonstrates the heuristic is hardware-agnostic; on a TPU host the identical
-code measures chunked device execution)."""
+code measures chunked device execution).
+
+All three campaigns drive the facade (`repro.api.SolverConfig` /
+`TridiagSession`): one base config names the solve setup (m, backend) and
+each campaign cell is ``base.replace(num_chunks=k)`` — the exact config
+object a fitted heuristic will later serve through, so the calibration and
+the serving path cannot drift apart.
+"""
 
 from __future__ import annotations
 
@@ -11,9 +18,8 @@ import numpy as np
 
 from repro.core.streams.simulator import StreamDataset
 from repro.core.streams.timemodel import overhead_from_measurement
-from repro.core.tridiag.batched import BatchedPartitionSolver
-from repro.core.tridiag.chunked import ChunkTiming, ChunkedPartitionSolver
-from repro.core.tridiag.ragged import RaggedPartitionSolver
+from repro.core.tridiag.api import SolverConfig, TridiagSession
+from repro.core.tridiag.plan import ChunkTiming
 from repro.core.tridiag.reference import make_diag_dominant_system
 
 
@@ -63,6 +69,13 @@ def _measure_cell(
             rows.append(row)
 
 
+def _base_config(m: int, backend) -> SolverConfig:
+    # Campaigns historically measured the reference stages when no backend
+    # was named; keep that (pass backend="auto"/"pallas" explicitly to
+    # profile the kernel path).
+    return SolverConfig(m=m, backend=backend if backend is not None else "reference")
+
+
 def measure_dataset(
     sizes: Sequence[int],
     candidates: Sequence[int] = (1, 2, 4, 8, 16, 32),
@@ -78,12 +91,13 @@ def measure_dataset(
     ``backend`` selects the stage implementation being profiled (reference jnp
     stages by default; ``"pallas"`` measures the kernel path), so one campaign
     pipeline calibrates the heuristic for whichever backend will serve."""
+    base = _base_config(m, backend)
     rows: List[Dict] = []
     for n in sizes:
         dl, d, du, b, _ = make_diag_dominant_system(n, seed=seed, dtype=dtype)
-        run = lambda k: ChunkedPartitionSolver(
-            m=m, num_chunks=k, backend=backend
-        ).solve_timed(dl, d, du, b)[1]
+        run = lambda k: TridiagSession(base.replace(num_chunks=k)).solve_timed(
+            dl, d, du, b
+        )[1]
         _measure_cell(
             rows, run, size=n, batch=None, candidates=candidates, reps=reps
         )
@@ -103,18 +117,19 @@ def measure_batched_dataset(
 ) -> StreamDataset:
     """Wall-clock campaign over the 2-D (size × batch) grid.
 
-    Each cell solves a batch of B independent size-n systems with the fused
-    `BatchedPartitionSolver` (on ``backend``); rows carry the ``batch`` key
-    consumed by ``fit_batched_stream_heuristic``."""
+    Each cell solves a batch of B independent size-n systems through the
+    session's fused batched verb (on ``backend``); rows carry the ``batch``
+    key consumed by ``fit_batched_stream_heuristic``."""
+    base = _base_config(m, backend)
     rows: List[Dict] = []
     for n in sizes:
         for batch in batches:
             dl, d, du, b, _ = make_diag_dominant_system(
                 n, seed=seed, batch=(batch,), dtype=dtype
             )
-            run = lambda k: BatchedPartitionSolver(
-                m=m, num_chunks=k, backend=backend
-            ).solve_timed(dl, d, du, b)[1]
+            run = lambda k: TridiagSession(
+                base.replace(num_chunks=k)
+            ).solve_batched_timed(dl, d, du, b)[1]
             _measure_cell(
                 rows, run, size=n, batch=batch, candidates=candidates, reps=reps
             )
@@ -134,10 +149,11 @@ def measure_ragged_dataset(
     """Wall-clock campaign over ragged mixed-size batches.
 
     Each cell fuses one *mix* — a tuple of heterogeneous system sizes — into a
-    single `RaggedPartitionSolver` solve (on ``backend``) and sweeps the chunk
+    single ``solve_many`` dispatch (on ``backend``) and sweeps the chunk
     candidates. Rows carry ``size = Σ nᵢ`` (the effective size the heuristic
     prices ragged batches by) and the originating ``mix``, so the same
     ``fit_batched_stream_heuristic`` pipeline consumes them unchanged."""
+    base = _base_config(m, backend)
     rows: List[Dict] = []
     for mix in mixes:
         mix = tuple(int(n) for n in mix)
@@ -145,9 +161,9 @@ def measure_ragged_dataset(
             make_diag_dominant_system(n, seed=seed + i, dtype=dtype)[:4]
             for i, n in enumerate(mix)
         ]
-        run = lambda k: RaggedPartitionSolver(
-            m=m, num_chunks=k, backend=backend
-        ).solve_timed(systems)[1]
+        run = lambda k: TridiagSession(base.replace(num_chunks=k)).solve_many_timed(
+            systems
+        )[1]
         _measure_cell(
             rows, run, size=sum(mix), batch=None, candidates=candidates,
             reps=reps, mix=mix,

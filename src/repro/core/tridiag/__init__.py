@@ -32,6 +32,33 @@ by ``repro.core.autotune.heuristic.BatchedStreamHeuristic`` (ground truth:
 ``StreamSimulator.actual_optimum(n, batch=B)``), and served by
 ``repro.serve.solve.BatchedSolveService``.
 
+The front door: config + session (``api.py``)
+---------------------------------------------
+`api.py` (re-exported as ``repro.api``) is the ONE public entry point: a
+frozen ``SolverConfig`` names the whole solve configuration once (m, dtype,
+backend — default ``"auto"``: Pallas kernels on TPU hosts, reference stages
+elsewhere — chunk policy, admission and plan-cache knobs, ``validate()``
+with actionable errors) and a ``TridiagSession`` built from it serves every
+batch shape through four verbs::
+
+    from repro.api import SolverConfig, TridiagSession, SolveRequest
+
+    cfg = SolverConfig(m=10, policy=HeuristicChunkPolicy(h),
+                       max_batch=64, max_wait_ms=5.0)
+    with TridiagSession(cfg) as s:
+        x   = s.solve(dl, d, du, b)          # one system
+        xb  = s.solve_batched(DL, D, DU, B)  # (B, n) same-size batch
+        xs  = s.solve_many(systems)          # ragged mixed-size batch
+        fut = s.submit(SolveRequest(0, dl, d, du, b))   # async serving
+        x0  = fut.result(timeout=1.0)        # deadline fires w/o poll()
+
+``submit`` is backed by a daemon worker thread running the admission loop
+(`api.SolveEngine`, which also powers the deprecated
+``serve.BatchedSolveService`` shim); ``close()``/the context manager drains
+the queue. The legacy ``ChunkedPartitionSolver`` / ``BatchedPartitionSolver``
+/ ``RaggedPartitionSolver`` classes survive as deprecated wrappers that
+delegate to an equivalently-configured session.
+
 Plan/execute architecture
 -------------------------
 `plan.py` is the single execution path: an immutable ``SolvePlan`` (fused
@@ -39,20 +66,12 @@ block layout, chunk bounds, halo map, per-system offsets; chunk count from a
 pluggable ``ChunkPolicy``) executed by a ``PlanExecutor`` whose stage
 callables are cached module-wide per ``(m, backend)`` — the stage
 implementation is itself pluggable (``ReferenceBackend`` jnp stages,
-``PallasBackend`` kernels), and plans are memoised by their
-``(sizes, m, num_chunks)`` signature. ``ChunkedPartitionSolver``,
-``BatchedPartitionSolver`` and `ragged.py`'s ``RaggedPartitionSolver`` are
-thin frontends that only build plans. `ragged.py` fuses *mixed-size* systems
-into one block axis (exact decoupling via zeroed boundary couplings), so one
-fused chunked solve covers a heterogeneous batch — priced by its effective
-size ``Σ nᵢ`` through the stream heuristic::
-
-    from repro.core.tridiag import RaggedPartitionSolver, build_plan
-
-    plan = build_plan((200, 1000, 5000), m=10, policy=HeuristicChunkPolicy(h))
-    xs = RaggedPartitionSolver(
-        m=10, policy=HeuristicChunkPolicy(h), backend="pallas"
-    ).solve(systems)
+``PallasBackend`` kernels, ``"auto"`` resolving per host), and plans are
+memoised by their ``(sizes, m, num_chunks)`` signature (both caches
+lock-protected: sessions solve from two threads). `ragged.py` fuses
+*mixed-size* systems into one block axis (exact decoupling via zeroed
+boundary couplings), so one fused chunked solve covers a heterogeneous batch
+— priced by its effective size ``Σ nᵢ`` through the stream heuristic.
 """
 
 from repro.core.tridiag.thomas import thomas, thomas_factor, thomas_solve_factored
@@ -102,6 +121,14 @@ from repro.core.tridiag.ragged import (
     solve_ragged,
     split_ragged,
 )
+from repro.core.tridiag.api import (
+    AdmissionPolicy,
+    SolveEngine,
+    SolveFuture,
+    SolveRequest,
+    SolverConfig,
+    TridiagSession,
+)
 
 __all__ = [
     "thomas",
@@ -143,6 +170,12 @@ __all__ = [
     "fuse_ragged",
     "solve_ragged",
     "split_ragged",
+    "AdmissionPolicy",
+    "SolveEngine",
+    "SolveFuture",
+    "SolveRequest",
+    "SolverConfig",
+    "TridiagSession",
 ]
 
 

@@ -1,0 +1,746 @@
+"""One front door for the predictive solve pipeline: config → session → verbs.
+
+The paper's deliverable is *predictive*: describe the workload once, let the
+fitted heuristic pick the optimum stream count, then run the partition solve.
+This module is the API expression of that contract. A frozen
+:class:`SolverConfig` names the whole solve configuration exactly once —
+sub-system size ``m``, precision, stage backend, chunk policy, admission and
+plan-cache knobs — and a :class:`TridiagSession` built from it serves every
+batch shape through four verbs:
+
+``solve(dl, d, du, b)``
+    one tridiagonal system (1-D diagonals; extra leading dims pass through);
+``solve_batched(dl, d, du, b)``
+    B same-size systems as ``(B, n)`` operands, fused into one dispatch;
+``solve_many(systems)``
+    a ragged list of mixed-size systems, fused into one dispatch;
+``submit(req) -> SolveFuture``
+    asynchronous serving — the request joins the session's admission queue
+    and the future resolves when its batch dispatches.
+
+``submit`` is backed by a daemon worker thread driving the
+:class:`AdmissionPolicy` loop, so a deadline (``max_wait_ms``) fires without
+anyone calling a ``poll()``: the worker sleeps exactly until the oldest
+request's deadline (or a ``max_batch`` wake-up) and dispatches the batch.
+``SolveFuture.result(timeout=...)`` blocks; ``.done()`` never does.
+``session.close()`` (or leaving the ``with`` block) drains the queue so every
+outstanding future completes, then stops the worker; the worker thread is
+only started by the first ``submit``, so synchronous-only sessions never pay
+for one.
+
+The queue/admission/dispatch core is :class:`SolveEngine` — the rebuilt
+``serve.solve.BatchedSolveService``, which survives there as a thin deprecated
+shim over this engine with its legacy ``submit/poll/flush`` contract.
+
+Usage::
+
+    from repro.api import SolverConfig, TridiagSession, SolveRequest
+
+    cfg = SolverConfig(m=10, policy=HeuristicChunkPolicy(fitted),
+                       max_batch=64, max_wait_ms=5.0)
+    with TridiagSession(cfg) as session:
+        x = session.solve(dl, d, du, b)                   # one system
+        xs = session.solve_batched(DL, D, DU, B)          # (B, n) batch
+        ys = session.solve_many(systems)                  # ragged mix
+        fut = session.submit(SolveRequest(0, dl, d, du, b))
+        x0 = fut.result(timeout=1.0)                      # deadline-served
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.tridiag.batched import fuse_systems, split_systems
+from repro.core.tridiag.plan import (
+    BACKENDS,
+    BackendLike,
+    ChunkPolicy,
+    ChunkTiming,
+    PlanExecutor,
+    SolvePlan,
+    Sizes,
+    build_plan,
+    effective_size,
+    price_chunks,
+    resolve_backend,
+    set_plan_cache_capacity,
+)
+from repro.core.tridiag.ragged import System, fuse_ragged, split_ragged
+
+__all__ = [
+    "AdmissionPolicy",
+    "SolveEngine",
+    "SolveFuture",
+    "SolveRequest",
+    "SolverConfig",
+    "TridiagSession",
+]
+
+
+# ------------------------------------------------------------------ request --
+@dataclass
+class SolveRequest:
+    """One tridiagonal system to solve (the serving unit of work)."""
+
+    rid: int
+    dl: np.ndarray
+    d: np.ndarray
+    du: np.ndarray
+    b: np.ndarray
+
+    @property
+    def size(self) -> int:
+        return int(np.asarray(self.d).shape[-1])
+
+
+@dataclass(frozen=True)
+class AdmissionPolicy:
+    """When does a batch leave the queue?
+
+    ``max_batch``    dispatch as soon as this many requests are waiting;
+    ``max_wait_ms``  dispatch (a possibly partial batch) once the oldest
+                     request has waited this long — the session's worker
+                     thread sleeps exactly until this deadline, the legacy
+                     service checks it on :meth:`SolveEngine.poll`;
+    ``allow_ragged`` fuse a mixed-size FIFO prefix into one ragged plan.
+                     When False, a batch only takes queue entries matching the
+                     head request's size (the PR-1 size-segregated behaviour,
+                     kept as the benchmark baseline).
+    """
+
+    max_batch: int = 64
+    max_wait_ms: float = math.inf
+    allow_ragged: bool = True
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.max_wait_ms < 0:
+            raise ValueError("max_wait_ms must be >= 0")
+
+
+# ------------------------------------------------------------------- config --
+@dataclass(frozen=True)
+class SolverConfig:
+    """The whole solve configuration, named once.
+
+    ``m``          the paper's sub-system (block) size; every system size must
+                   be a multiple of it.
+    ``dtype``      operand precision. ``None`` (default) preserves the input
+                   dtype; an explicit float dtype casts every operand on the
+                   way in (``np.float64`` is the paper's precision — remember
+                   ``repro.core.tridiag.ensure_x64()``).
+    ``backend``    stage implementation: ``"auto"`` (default — Pallas kernels
+                   on TPU hosts, reference jnp stages elsewhere),
+                   ``"reference"``, ``"pallas"``, or a ``StageBackend``.
+    ``policy``     a :class:`~repro.core.tridiag.plan.ChunkPolicy` pricing
+                   each dispatch (e.g. ``HeuristicChunkPolicy(fitted)``), or
+                   None to use the fixed ``num_chunks``.
+    ``num_chunks`` fixed chunk ("virtual stream") count; mutually exclusive
+                   with ``policy``. With neither, solves are unchunked.
+    ``max_batch`` / ``max_wait_ms`` / ``allow_ragged``
+                   admission knobs for :meth:`TridiagSession.submit`
+                   (see :class:`AdmissionPolicy`).
+    ``plan_cache_capacity``
+                   resize the plan LRU at session construction (None leaves
+                   it alone; 0 disables plan memoisation). The cache is
+                   deliberately PROCESS-WIDE — plans are pure functions of
+                   their signature, so sessions share hits — which means this
+                   knob affects every live session and the last-constructed
+                   session wins; set it from one place in a deployment.
+
+    Frozen: a config can be shared between sessions, stored alongside fitted
+    heuristics, and varied with :meth:`replace`. :meth:`validate` checks the
+    whole object and raises ``ValueError``/``TypeError`` with actionable
+    messages; :class:`TridiagSession` calls it for you.
+    """
+
+    m: int = 10
+    dtype: Optional[object] = None
+    backend: BackendLike = "auto"
+    policy: Optional[ChunkPolicy] = None
+    num_chunks: Optional[int] = None
+    max_batch: int = 64
+    max_wait_ms: float = math.inf
+    allow_ragged: bool = True
+    plan_cache_capacity: Optional[int] = None
+
+    # -- validation ----------------------------------------------------------
+    def validate(self) -> "SolverConfig":
+        """Check every field; raise with an actionable message on the first
+        problem. Returns self so ``SolverConfig(...).validate()`` chains."""
+        if not isinstance(self.m, (int, np.integer)) or self.m < 2:
+            raise ValueError(
+                f"m={self.m!r}: the sub-system size must be an int >= 2 "
+                f"(the paper uses m=10)"
+            )
+        if self.dtype is not None:
+            try:
+                kind = np.dtype(self.dtype).kind
+            except TypeError:
+                raise ValueError(
+                    f"dtype={self.dtype!r} is not a NumPy dtype; pass "
+                    f"np.float64, np.float32, or None to preserve input dtypes"
+                ) from None
+            if kind != "f":
+                raise ValueError(
+                    f"dtype={self.dtype!r}: the solver runs in floating "
+                    f"point; pass np.float64, np.float32, or None"
+                )
+        resolve_backend(self.backend)  # raises naming the known backends
+        if self.policy is not None:
+            if not isinstance(self.policy, ChunkPolicy):
+                raise TypeError(
+                    f"policy must be a ChunkPolicy (e.g. FixedChunkPolicy, "
+                    f"HeuristicChunkPolicy), got {self.policy!r}"
+                )
+            if self.num_chunks is not None:
+                raise ValueError(
+                    "pass policy= or num_chunks=, not both: a policy prices "
+                    "every dispatch, a fixed num_chunks overrides it"
+                )
+        if self.num_chunks is not None and self.num_chunks < 1:
+            raise ValueError(
+                f"num_chunks={self.num_chunks}: must be >= 1 (or None for a "
+                f"policy/unchunked solve)"
+            )
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch={self.max_batch}: must be >= 1")
+        if self.max_wait_ms < 0:
+            raise ValueError(
+                f"max_wait_ms={self.max_wait_ms}: must be >= 0 "
+                f"(math.inf disables the deadline)"
+            )
+        if self.plan_cache_capacity is not None and self.plan_cache_capacity < 0:
+            raise ValueError(
+                f"plan_cache_capacity={self.plan_cache_capacity}: must be "
+                f">= 0 (0 disables plan memoisation, None leaves the "
+                f"process-wide default)"
+            )
+        return self
+
+    # -- derived views -------------------------------------------------------
+    def replace(self, **changes) -> "SolverConfig":
+        """A copy with ``changes`` applied (e.g. ``cfg.replace(num_chunks=k)``
+        inside a chunk sweep)."""
+        return dataclasses.replace(self, **changes)
+
+    def admission(self) -> AdmissionPolicy:
+        """The admission policy the session's serving queue runs under."""
+        return AdmissionPolicy(
+            max_batch=self.max_batch,
+            max_wait_ms=self.max_wait_ms,
+            allow_ragged=self.allow_ragged,
+        )
+
+
+# ------------------------------------------------------------------- future --
+class SolveFuture:
+    """Handle to one submitted request; resolves when its batch dispatches.
+
+    ``result(timeout=)`` blocks until the solution (or re-raises the dispatch
+    error); ``done()`` never blocks; ``exception(timeout=)`` blocks like
+    ``result`` but returns the error instead of raising it (None on success).
+    """
+
+    def __init__(self, rid: int):
+        self.rid = rid
+        self._event = threading.Event()
+        self._value: Optional[np.ndarray] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.rid} not solved within {timeout}s; is its "
+                f"batch still waiting for admission (max_batch/max_wait_ms)?"
+            )
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not resolved within {timeout}s")
+        return self._error
+
+    def _resolve(self, value=None, error: Optional[BaseException] = None) -> None:
+        self._value = value
+        self._error = error
+        self._event.set()
+
+
+@dataclass
+class _Pending:
+    req: SolveRequest
+    t_submit: float
+
+
+# ------------------------------------------------------------------- engine --
+class SolveEngine:
+    """Admission-controlled fused solving of a request queue (the core).
+
+    This is the serving engine behind :meth:`TridiagSession.submit` (driven
+    by the session's worker thread) and the legacy
+    ``serve.solve.BatchedSolveService`` shim (driven by its caller's
+    ``submit/poll/flush``). The engine itself is synchronous and not
+    thread-safe — the session serialises access around it.
+
+    Chunk pricing: ``policy`` (a :class:`ChunkPolicy`) prices each dispatch,
+    or ``heuristic`` (a fitted ``BatchedStreamHeuristic``) via
+    ``plan.price_chunks``, else a fixed ``default_chunks``. All dispatches
+    run through the plan/execute layer, whose module-level jit/plan caches
+    make per-batch construction free of retracing and replanning.
+
+    Results surface either through the ``on_result``/``on_error`` callbacks
+    (the session's futures) or, with no callbacks, an internal ``{rid: x}``
+    store drained by :meth:`poll`/:meth:`flush` (the legacy contract).
+
+    ``clock`` (default ``time.perf_counter``) is injectable so deadline tests
+    can drive virtual time; batch latency is always real wall time.
+
+    Stats: ``stats["batches"]/["systems"]/["wall_s"]`` aggregate throughput
+    (``systems_per_sec``); ``stats["per_batch"]`` records one dict per
+    dispatch with the batch composition, chunk count, solve latency and the
+    requests' queue wait times.
+    """
+
+    def __init__(
+        self,
+        *,
+        m: int = 10,
+        heuristic=None,
+        policy: Optional[ChunkPolicy] = None,
+        default_chunks: int = 1,
+        admission: Optional[AdmissionPolicy] = None,
+        eager: bool = False,
+        clock: Callable[[], float] = time.perf_counter,
+        backend: BackendLike = None,
+        dtype=None,
+        on_result: Optional[Callable[[int, np.ndarray], None]] = None,
+        on_error: Optional[Callable[[int, BaseException], None]] = None,
+    ):
+        self.admission = admission if admission is not None else AdmissionPolicy()
+        self.max_batch = self.admission.max_batch
+        self.heuristic = heuristic
+        self.policy = policy
+        self.m = m
+        self.default_chunks = default_chunks
+        self.dtype = dtype
+        self._eager = eager
+        self._clock = clock
+        self._executor = PlanExecutor(backend=backend)
+        self._on_result = on_result
+        self._on_error = on_error
+        self._queue: List[_Pending] = []
+        self._results: Dict[int, np.ndarray] = {}
+        self.stats = {"batches": 0, "systems": 0, "wall_s": 0.0, "per_batch": []}
+
+    # -- scheduling ----------------------------------------------------------
+    def submit(self, req: SolveRequest) -> None:
+        """Validate and enqueue a request; with ``eager=True``, admission
+        triggers (a full batch) dispatch inside this call."""
+        d = np.asarray(req.d)
+        if d.ndim != 1:
+            raise ValueError(
+                f"request {req.rid}: d must be 1-D, got shape {d.shape} "
+                f"(use solve_batched for (B, n) operands)"
+            )
+        # A mismatched diagonal used to sail through submit and explode later
+        # inside the fused dispatch with an opaque shape error — worse, inside
+        # a batch of innocent neighbours. Name the offender here instead.
+        for name in ("dl", "du", "b"):
+            a = np.asarray(getattr(req, name))
+            if a.shape != d.shape:
+                raise ValueError(
+                    f"request {req.rid}: {name} has shape {a.shape} but the "
+                    f"request's size is {req.size} (d has shape {d.shape}); "
+                    f"all four diagonals must be equally long"
+                )
+        if req.size % self.m:
+            raise ValueError(
+                f"request {req.rid}: size {req.size} not divisible by m={self.m}"
+            )
+        if self.dtype is not None:
+            req = SolveRequest(
+                req.rid,
+                *(np.asarray(a, dtype=self.dtype) for a in (req.dl, req.d, req.du, req.b)),
+            )
+        self._queue.append(_Pending(req, self._clock()))
+        if self._eager:
+            self._admit(self._clock())
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def pick_chunks(self, size: int, batch: int) -> int:
+        """Chunk count for a same-size (size × batch) dispatch."""
+        return self.pick_chunks_ragged((size,) * batch)
+
+    def pick_chunks_ragged(self, sizes: Sequence[int]) -> int:
+        """Chunk count for any dispatch, priced by its effective size Σ nᵢ
+        (same-size batches are the ``(n,)*B`` special case). Delegates to
+        `repro.core.tridiag.plan.price_chunks` — the *same* rule
+        `HeuristicChunkPolicy` applies, so a batch gets one chunk count no
+        matter which entry point prices it."""
+        if self.policy is not None:
+            return max(1, int(self.policy.num_chunks(tuple(sizes), self.m)))
+        if self.heuristic is None:
+            return self.default_chunks
+        return price_chunks(self.heuristic, tuple(sizes))
+
+    # -- admission -----------------------------------------------------------
+    def seconds_to_deadline(self, now: Optional[float] = None) -> Optional[float]:
+        """Seconds until the oldest pending request's deadline expires.
+
+        None when the queue is empty or no deadline is configured; 0.0 when
+        it has already expired. This is exactly how long the session's worker
+        thread may sleep before the next poll must run.
+        """
+        if not self._queue or math.isinf(self.admission.max_wait_ms):
+            return None
+        now = self._clock() if now is None else now
+        deadline = self._queue[0].t_submit + self.admission.max_wait_ms / 1e3
+        return max(0.0, deadline - now)
+
+    def _deadline_expired(self, now: float) -> bool:
+        return (
+            bool(self._queue)
+            and (now - self._queue[0].t_submit) * 1e3 >= self.admission.max_wait_ms
+        )
+
+    def take_due_group(self, now: float) -> Optional[List[_Pending]]:
+        """Pop the next admissible batch (max_batch reached or deadline
+        expired), or None. This is the session worker's lock-held step —
+        cheap queue surgery only; the dispatch itself runs outside the lock
+        so submits keep flowing (and getting exact timestamps) while a batch
+        is in flight."""
+        if self._queue and (
+            len(self._queue) >= self.admission.max_batch
+            or self._deadline_expired(now)
+        ):
+            return self._take_group()
+        return None
+
+    def _admit(self, now: float) -> None:
+        """Dispatch while an admission trigger holds (max_batch or deadline)."""
+        while True:
+            group = self.take_due_group(now)
+            if group is None:
+                return
+            self._dispatch(group, now)
+
+    def _take_group(self) -> List[_Pending]:
+        q = self._queue
+        if self.admission.allow_ragged:
+            take, self._queue = q[: self.max_batch], q[self.max_batch :]
+            return take
+        # Size-segregated baseline: only the head request's size-mates ride.
+        size0 = q[0].req.size
+        take, rest = [], []
+        for p in q:
+            if p.req.size == size0 and len(take) < self.max_batch:
+                take.append(p)
+            else:
+                rest.append(p)
+        self._queue = rest
+        return take
+
+    def poll(self, now: Optional[float] = None) -> Dict[int, np.ndarray]:
+        """Run deadline admission and drain finished results."""
+        now = self._clock() if now is None else now
+        self._admit(now)
+        return self._drain()
+
+    def flush(self) -> Dict[int, np.ndarray]:
+        """Dispatch everything pending; returns every undrained {rid: solution}."""
+        now = self._clock()
+        while self._queue:
+            self._dispatch(self._take_group(), now)
+        return self._drain()
+
+    # -- execution -----------------------------------------------------------
+    def _drain(self) -> Dict[int, np.ndarray]:
+        out, self._results = self._results, {}
+        return out
+
+    def _dispatch(self, group: List[_Pending], now: float) -> None:
+        reqs = [p.req for p in group]
+        sizes = tuple(r.size for r in reqs)
+        same_size = len(set(sizes)) == 1
+        t0 = time.perf_counter()
+        try:
+            dl, d, du, b, sizes = fuse_ragged([(r.dl, r.d, r.du, r.b) for r in reqs])
+            if self.policy is not None:
+                plan = build_plan(sizes, self.m, policy=self.policy)
+            else:
+                plan = build_plan(
+                    sizes, self.m, num_chunks=self.pick_chunks_ragged(sizes)
+                )
+            x, _ = self._executor.execute(plan, dl, d, du, b)
+        except Exception as e:
+            # With futures attached, a bad dispatch must fail *those* requests
+            # and leave the engine serving; the legacy shim keeps the raise.
+            if self._on_error is not None:
+                for r in reqs:
+                    self._on_error(r.rid, e)
+                return
+            raise
+        # copy: split_ragged returns views, which would otherwise pin the
+        # whole fused solution for as long as any one result is retained
+        solutions = [
+            np.array(xi, dtype=self.dtype, copy=True)
+            for xi in split_ragged(x, sizes)
+        ]
+        dt = time.perf_counter() - t0
+        waits_ms = [(now - p.t_submit) * 1e3 for p in group]
+        # Stats are recorded BEFORE futures resolve: a caller unblocked by
+        # fut.result() may immediately read session.stats and must see this
+        # batch's entry (the worker races it otherwise).
+        self.stats["batches"] += 1
+        self.stats["systems"] += len(reqs)
+        self.stats["wall_s"] += dt
+        self.stats["per_batch"].append(
+            {
+                "systems": len(reqs),
+                "sizes": sizes,
+                "effective_size": effective_size(sizes),
+                "ragged": not same_size,
+                "num_chunks": plan.num_chunks,
+                "latency_ms": dt * 1e3,
+                "mean_wait_ms": float(np.mean(waits_ms)),
+                "max_wait_ms": float(np.max(waits_ms)),
+            }
+        )
+        for r, xi in zip(reqs, solutions):
+            if self._on_result is not None:
+                self._on_result(r.rid, xi)
+            else:
+                self._results[r.rid] = xi
+
+    @property
+    def systems_per_sec(self) -> float:
+        return self.stats["systems"] / max(self.stats["wall_s"], 1e-12)
+
+
+# ------------------------------------------------------------------ session --
+class TridiagSession:
+    """The facade: one configured object serving every batch shape.
+
+    Synchronous verbs (:meth:`solve`, :meth:`solve_batched`,
+    :meth:`solve_many` and their ``*_timed`` variants) run on the caller's
+    thread through the plan/execute layer. :meth:`submit` is asynchronous: a
+    daemon worker thread drives the admission loop, so ``max_wait_ms``
+    deadlines fire on time without any polling. Both sides share the
+    module-level plan/stage caches (lock-protected for exactly this reason),
+    so a session is safe to use from the submitting thread while its worker
+    dispatches.
+
+    Lifecycle: the worker starts lazily on the first ``submit``;
+    :meth:`close` drains the queue (every outstanding future completes) and
+    stops the worker; ``close`` is idempotent and ``submit`` after it raises.
+    The session is a context manager — ``with TridiagSession(cfg) as s: ...``
+    closes on exit.
+    """
+
+    def __init__(self, config: Optional[SolverConfig] = None):
+        self.config = (SolverConfig() if config is None else config).validate()
+        self.backend = resolve_backend(self.config.backend)
+        self._executor = PlanExecutor(backend=self.backend)
+        if self.config.plan_cache_capacity is not None:
+            set_plan_cache_capacity(self.config.plan_cache_capacity)
+        self._cv = threading.Condition()
+        self._futures: Dict[int, SolveFuture] = {}
+        self._worker: Optional[threading.Thread] = None
+        self._closed = False
+        self._engine = SolveEngine(
+            m=self.config.m,
+            policy=self.config.policy,
+            default_chunks=self.config.num_chunks or 1,
+            admission=self.config.admission(),
+            eager=False,  # the worker owns every dispatch
+            backend=self.backend,
+            dtype=self.config.dtype,
+            on_result=lambda rid, x: self._resolve_future(rid, value=x),
+            on_error=lambda rid, e: self._resolve_future(rid, error=e),
+        )
+
+    # -- planning ------------------------------------------------------------
+    def plan_for(self, sizes: Sizes) -> SolvePlan:
+        """The plan this session executes for ``sizes`` (int or sequence)."""
+        if self.config.policy is not None:
+            return build_plan(sizes, self.config.m, policy=self.config.policy)
+        return build_plan(sizes, self.config.m, num_chunks=self.config.num_chunks or 1)
+
+    def _cast(self, *arrays):
+        if self.config.dtype is None:
+            return arrays
+        return tuple(np.asarray(a, dtype=self.config.dtype) for a in arrays)
+
+    def _cast_out(self, x):
+        # The config names the precision once — outputs honour it too (the
+        # reference stages may promote fp32 coefficients against the fp64
+        # host reduced solve).
+        if self.config.dtype is None:
+            return x
+        return np.asarray(x, dtype=self.config.dtype)
+
+    # -- synchronous verbs ---------------------------------------------------
+    def solve(self, dl, d, du, b) -> np.ndarray:
+        """Solve one system (1-D diagonals; leading batch dims pass through)."""
+        return self.solve_timed(dl, d, du, b)[0]
+
+    def solve_timed(self, dl, d, du, b) -> Tuple[np.ndarray, ChunkTiming]:
+        dl, d, du, b = self._cast(dl, d, du, b)
+        n = int(np.asarray(d).shape[-1])
+        x, timing = self._executor.execute(self.plan_for(n), dl, d, du, b)
+        return self._cast_out(x), timing
+
+    def solve_batched(self, dl, d, du, b) -> np.ndarray:
+        """Solve B same-size systems given as (B, n) operands."""
+        return self.solve_batched_timed(dl, d, du, b)[0]
+
+    def solve_batched_timed(self, dl, d, du, b) -> Tuple[np.ndarray, ChunkTiming]:
+        dl, d, du, b = self._cast(dl, d, du, b)
+        d_arr = np.asarray(d)
+        if d_arr.ndim != 2:
+            raise ValueError(
+                f"solve_batched takes (batch, n) operands, got shape "
+                f"{d_arr.shape}; use solve() for one system or solve_many() "
+                f"for mixed sizes"
+            )
+        batch, n = d_arr.shape
+        fused = fuse_systems(dl, d_arr, du, b)
+        x, timing = self._executor.execute(self.plan_for((n,) * batch), *fused)
+        return split_systems(self._cast_out(x), batch), timing
+
+    def solve_many(self, systems: Sequence[System]) -> List[np.ndarray]:
+        """Solve a ragged list of ``(dl, d, du, b)`` systems in one dispatch."""
+        return self.solve_many_timed(systems)[0]
+
+    def solve_many_timed(
+        self, systems: Sequence[System]
+    ) -> Tuple[List[np.ndarray], ChunkTiming]:
+        if self.config.dtype is not None:
+            systems = [self._cast(*s) for s in systems]
+        dl, d, du, b, sizes = fuse_ragged(systems)
+        x, timing = self._executor.execute(self.plan_for(sizes), dl, d, du, b)
+        return split_ragged(self._cast_out(x), sizes), timing
+
+    # -- asynchronous serving ------------------------------------------------
+    def submit(self, req: SolveRequest) -> SolveFuture:
+        """Enqueue a request; the returned future resolves when its batch
+        dispatches (at ``max_batch`` occupancy or the ``max_wait_ms``
+        deadline — whichever the worker hits first)."""
+        fut = SolveFuture(req.rid)
+        with self._cv:
+            if self._closed:
+                raise RuntimeError(
+                    "session is closed; create a new TridiagSession (close() "
+                    "drains the queue, it cannot be reopened)"
+                )
+            if req.rid in self._futures:
+                raise ValueError(
+                    f"request id {req.rid} is already in flight in this "
+                    f"session; rids must be unique among pending requests"
+                )
+            self._futures[req.rid] = fut
+            try:
+                self._engine.submit(req)
+            except Exception:
+                del self._futures[req.rid]
+                raise
+            if self._worker is None:
+                self._worker = threading.Thread(
+                    target=self._serve_loop,
+                    name="tridiag-session-worker",
+                    daemon=True,
+                )
+                self._worker.start()
+            self._cv.notify_all()
+        return fut
+
+    def _resolve_future(self, rid: int, value=None, error=None) -> None:
+        fut = self._futures.pop(rid, None)
+        if fut is not None:
+            fut._resolve(value, error)
+
+    def _serve_loop(self) -> None:
+        """Worker: dispatch due batches, sleep exactly until the next trigger.
+
+        Wake-ups: a submit notification (max_batch may now hold), the oldest
+        request's deadline (timed wait), or close(). No caller ever polls.
+        The lock is held only for queue surgery — each solve runs OUTSIDE it,
+        so submits keep enqueuing (with exact deadline timestamps) while a
+        batch is in flight.
+        """
+        while True:
+            with self._cv:
+                now = self._engine._clock()
+                group = self._engine.take_due_group(now)
+                if group is None:
+                    if self._closed:
+                        if self._engine.pending() == 0:
+                            return
+                        group = self._engine._take_group()  # drain mode
+                    elif self._engine.pending() == 0:
+                        self._cv.wait()
+                        continue
+                    else:
+                        self._cv.wait(
+                            timeout=self._engine.seconds_to_deadline(now)
+                        )
+                        continue
+            self._engine._dispatch(group, now)  # futures resolve in here
+
+    # -- lifecycle -----------------------------------------------------------
+    def pending(self) -> int:
+        """Requests waiting for admission (futures not yet resolved)."""
+        with self._cv:
+            return self._engine.pending()
+
+    @property
+    def stats(self) -> dict:
+        """The serving engine's dispatch stats (see :class:`SolveEngine`)."""
+        return self._engine.stats
+
+    def close(self) -> None:
+        """Drain the queue (outstanding futures complete), stop the worker.
+
+        Idempotent: further ``close()`` calls return immediately; ``submit``
+        after close raises ``RuntimeError``. Synchronous verbs stay usable —
+        only the serving side shuts down.
+        """
+        with self._cv:
+            self._closed = True
+            worker = self._worker
+            self._cv.notify_all()
+        if worker is not None:
+            worker.join()
+
+    def __enter__(self) -> "TridiagSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        state = "closed" if self._closed else "open"
+        return (
+            f"TridiagSession(m={self.config.m}, backend={self.backend.name!r}, "
+            f"{state}, pending={self._engine.pending()})"
+        )
+
+
+# Convenience: the registry names a config's backend may take.
+BACKEND_NAMES = tuple(sorted(BACKENDS))

@@ -1,4 +1,4 @@
-"""Chunked ("virtual stream") execution of the partition method.
+"""Chunked ("virtual stream") execution of the partition method — deprecated.
 
 The paper dispatches slices of the block axis onto separate CUDA streams so
 each slice's H2D copy, Stage-1 kernel and D2H copy overlap with its
@@ -9,16 +9,19 @@ without blocking, so the runtime pipelines transfer and compute of successive
 chunks. Stage 2 (the reduced solve) runs on the host in NumPy, exactly as the
 paper keeps it on the CPU.
 
-Since the plan/execute refactor this module is a *thin frontend*: the chunk
-bounds, halo map and ghost-block splicing live in
-`repro.core.tridiag.plan` (`SolvePlan` / `PlanExecutor`); the solver here
-just builds a single-system plan and runs it. It is used by the measurement
-path of the autotuner (`repro.core.streams.measure`) and by
-`examples/autotune_streams.py`.
+Since the facade redesign this class is a *deprecated delegating wrapper*:
+the one front door is :mod:`repro.core.tridiag.api` —
+
+    TridiagSession(SolverConfig(m=10, num_chunks=4)).solve(dl, d, du, b)
+
+replaces ``ChunkedPartitionSolver(m=10, num_chunks=4).solve(dl, d, du, b)``.
+Chunk bounds, halo map and ghost-block splicing live in
+`repro.core.tridiag.plan` (`SolvePlan` / `PlanExecutor`) as before.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import List, Sequence, Tuple
 
 import numpy as np
@@ -32,25 +35,40 @@ from repro.core.tridiag.plan import (  # noqa: F401  (ChunkTiming re-exported)
 
 
 class ChunkedPartitionSolver:
-    """Partition solver whose block axis is processed in ``num_chunks`` slices.
+    """Deprecated: use ``repro.api.TridiagSession`` with a ``SolverConfig``.
 
     ``num_chunks`` plays the role of the paper's ``num_str``: 1 reproduces the
     non-streamed execution (Eq. 1); larger values overlap staging and compute
     (Eq. 2) at the price of per-chunk dispatch overhead. ``backend`` picks the
     stage implementation (``"reference"`` jnp stages, ``"pallas"`` kernels, or
-    a :class:`~repro.core.tridiag.plan.StageBackend` instance).
+    a :class:`~repro.core.tridiag.plan.StageBackend` instance). All calls
+    delegate to an equivalently-configured session.
     """
 
     def __init__(self, m: int = 10, num_chunks: int = 1, *, backend=None):
-        if num_chunks < 1:
-            raise ValueError("num_chunks must be >= 1")
+        warnings.warn(
+            "ChunkedPartitionSolver is deprecated: use repro.api."
+            "TridiagSession(SolverConfig(m=..., num_chunks=..., backend=...))"
+            ".solve(...)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.core.tridiag.api import SolverConfig, TridiagSession
+
         self.m = m
         self.num_chunks = num_chunks
-        self._executor = PlanExecutor(backend=backend)
+        # Legacy default backend is the reference stages (None), not "auto".
+        self._session = TridiagSession(
+            SolverConfig(
+                m=m,
+                num_chunks=num_chunks,
+                backend=backend if backend is not None else "reference",
+            )
+        )
 
     def plan_for(self, n: int) -> SolvePlan:
         """The single-system plan this solver executes for size ``n``."""
-        return build_plan(n, self.m, num_chunks=self.num_chunks)
+        return self._session.plan_for(n)
 
     # -- public API ---------------------------------------------------------
     def solve(
@@ -73,7 +91,7 @@ class ChunkedPartitionSolver:
         n = np.asarray(d).shape[-1]
         if n % self.m:
             raise ValueError(f"system size {n} not divisible by m={self.m}")
-        return self._executor.execute(self.plan_for(n), dl, d, du, b)
+        return self._session.solve_timed(dl, d, du, b)
 
 
 def measure_chunk_sweep(
@@ -91,16 +109,18 @@ def measure_chunk_sweep(
     so trace/compile time never pollutes the measurements (the jitted stages
     are cached module-wide, but each chunk count sees new operand shapes).
     """
+    from repro.core.tridiag.api import SolverConfig, TridiagSession
     from repro.core.tridiag.reference import make_diag_dominant_system
 
     dl, d, du, b, _ = make_diag_dominant_system(n, seed=seed, dtype=dtype)
+    base = SolverConfig(m=m, backend="reference")
     results = []
     for k in chunk_counts:
-        solver = ChunkedPartitionSolver(m=m, num_chunks=k)
-        solver.solve_timed(dl, d, du, b)  # untimed warmup
+        session = TridiagSession(base.replace(num_chunks=k))
+        session.solve_timed(dl, d, du, b)  # untimed warmup
         best = None
         for _ in range(repeats):
-            _, t = solver.solve_timed(dl, d, du, b)
+            _, t = session.solve_timed(dl, d, du, b)
             if best is None or t.t_total_ms < best.t_total_ms:
                 best = t
         results.append(best)

@@ -13,8 +13,8 @@ where each system's solution lives in the fused vector.  A
   Stage 2  host-side reduced solve (the paper keeps it on the CPU),
   Stage 3  per-chunk back-substitution with a ghost block for the left edge.
 
-Frontends (`ChunkedPartitionSolver`, `BatchedPartitionSolver`,
-`RaggedPartitionSolver`, `serve.BatchedSolveService`) only *build plans*;
+The front door (`api.TridiagSession` and its `SolveEngine`, plus the
+deprecated solver-class wrappers that delegate to it) only *builds plans*;
 chunk bounds, halo handling and ghost splicing live here and nowhere else.
 
 The chunk count is either given explicitly or chosen by a pluggable
@@ -36,7 +36,9 @@ Pallas kernels run in interpret mode (``repro.kernels.common
 .interpret_default``), so every planned path — single, batched, ragged,
 serving — exercises the real kernel bodies under tier-1. Solvers and services
 accept ``backend=`` (an instance or the registry names ``"reference"`` /
-``"pallas"``); the jitted stages are cached module-wide per ``(m, backend)``.
+``"pallas"`` / ``"auto"``, where ``"auto"`` resolves to the Pallas kernels on
+TPU hosts and the reference stages elsewhere); the jitted stages are cached
+module-wide per ``(m, backend)``.
 
 Plan cache
 ----------
@@ -44,11 +46,18 @@ Plan cache
 (bounded LRU): serving traffic repeats batch compositions, and a plan is a
 pure function of its signature, so repeated dispatches skip replanning.
 ``plan_cache_stats()`` / ``clear_plan_cache()`` expose hit/miss counters for
-tests and capacity planning.
+tests and capacity planning; ``set_plan_cache_capacity()`` resizes the LRU
+(``SolverConfig.plan_cache_capacity`` threads it through the facade).
+
+Both module-level caches (plans and jitted stages) are lock-protected:
+``TridiagSession.submit`` solves from a worker thread while the session's
+synchronous verbs run on the caller's thread, so two threads legitimately
+plan and fetch stages concurrently.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -190,28 +199,54 @@ class PallasBackend(StageBackend):
         return stage3
 
 
+@dataclass(frozen=True)
+class AutoBackend(StageBackend):
+    """Hardware-resolved backend: Pallas kernels on TPU hosts, reference
+    elsewhere (the ROADMAP PR-3 follow-up, and ``SolverConfig``'s default).
+
+    :func:`resolve_backend` unwraps it eagerly, so the module-level stage
+    cache only ever keys *concrete* backends — ``"auto"`` and the name it
+    resolves to share one cache entry.
+    """
+
+    name = "auto"
+
+    def resolve(self) -> StageBackend:
+        return BACKENDS["pallas" if jax.default_backend() == "tpu" else "reference"]
+
+    def make_stage1(self, m: int) -> Callable:
+        return self.resolve().make_stage1(m)
+
+    def make_stage3(self) -> Callable:
+        return self.resolve().make_stage3()
+
+
 #: Registry consulted when ``backend=`` is given as a string; keys are the
 #: backends' ``name`` attributes.
 BACKENDS: Dict[str, StageBackend] = {
-    b.name: b for b in (ReferenceBackend(), PallasBackend())
+    b.name: b for b in (ReferenceBackend(), PallasBackend(), AutoBackend())
 }
 
 BackendLike = Union[StageBackend, str, None]
 
 
 def resolve_backend(backend: BackendLike) -> StageBackend:
-    """Normalise a ``backend=`` argument: None → reference, str → registry."""
+    """Normalise a ``backend=`` argument: None → reference, str → registry,
+    ``"auto"``/:class:`AutoBackend` → whichever concrete backend fits this
+    host (Pallas on TPU, reference elsewhere)."""
     if backend is None:
         return BACKENDS["reference"]
-    if isinstance(backend, StageBackend):
-        return backend
     if isinstance(backend, str):
         try:
-            return BACKENDS[backend]
+            backend = BACKENDS[backend]
         except KeyError:
             raise ValueError(
                 f"unknown stage backend {backend!r}; known: {sorted(BACKENDS)}"
             ) from None
+    if isinstance(backend, AutoBackend):
+        return backend.resolve()
+    if isinstance(backend, StageBackend):
+        return backend
     raise TypeError(f"backend must be a StageBackend, name or None, got {backend!r}")
 
 
@@ -223,6 +258,12 @@ def resolve_backend(backend: BackendLike) -> StageBackend:
 # must not follow suit. The callables are batch-polymorphic (leading dims
 # pass through), so each cached pair serves the single, batched and ragged
 # paths alike; jax.jit specialises per operand shape internally.
+#
+# _CACHE_LOCK guards both stage caches and the plan cache below: a
+# TridiagSession dispatches from its worker thread while its synchronous
+# verbs (and other sessions) run on caller threads, and interleaved dict/LRU
+# mutation would corrupt the OrderedDict order or drop entries.
+_CACHE_LOCK = threading.RLock()
 _STAGE1_CACHE: Dict[Tuple[int, StageBackend], Callable] = {}
 _STAGE3_CACHE: Dict[StageBackend, Callable] = {}
 
@@ -231,11 +272,14 @@ def jitted_stages(m: int, backend: BackendLike = None) -> Tuple[Callable, Callab
     """Return the cached ``(stage1, stage3)`` callables for ``(m, backend)``."""
     backend = resolve_backend(backend)
     key = (m, backend)
-    if key not in _STAGE1_CACHE:
-        _STAGE1_CACHE[key] = backend.make_stage1(m)
-    if backend not in _STAGE3_CACHE:
-        _STAGE3_CACHE[backend] = backend.make_stage3()
-    return _STAGE1_CACHE[key], _STAGE3_CACHE[backend]
+    # make_stage{1,3} only build (cheap) wrappers — tracing happens at first
+    # call — so holding the lock across them is fine and keeps one winner.
+    with _CACHE_LOCK:
+        if key not in _STAGE1_CACHE:
+            _STAGE1_CACHE[key] = backend.make_stage1(m)
+        if backend not in _STAGE3_CACHE:
+            _STAGE3_CACHE[backend] = backend.make_stage3()
+        return _STAGE1_CACHE[key], _STAGE3_CACHE[backend]
 
 
 # ------------------------------------------------------------ chunk policies --
@@ -365,14 +409,33 @@ _PLAN_STATS = {"hits": 0, "misses": 0}
 
 def plan_cache_stats() -> Dict[str, int]:
     """Hit/miss counters of the build_plan memo (plus its current size)."""
-    return {**_PLAN_STATS, "size": len(_PLAN_CACHE)}
+    with _CACHE_LOCK:
+        return {**_PLAN_STATS, "size": len(_PLAN_CACHE)}
 
 
 def clear_plan_cache() -> None:
     """Empty the plan memo and reset its counters (test isolation hook)."""
-    _PLAN_CACHE.clear()
-    _PLAN_STATS["hits"] = 0
-    _PLAN_STATS["misses"] = 0
+    with _CACHE_LOCK:
+        _PLAN_CACHE.clear()
+        _PLAN_STATS["hits"] = 0
+        _PLAN_STATS["misses"] = 0
+
+
+def set_plan_cache_capacity(capacity: int) -> None:
+    """Resize the plan LRU (process-wide); 0 disables plan memoisation.
+
+    Cached plans beyond the new capacity are evicted oldest-first.
+    ``SolverConfig.plan_cache_capacity`` applies this at session construction
+    for deployments that want a bigger memo (many distinct batch
+    compositions) or none at all (adversarial traffic).
+    """
+    global _PLAN_CACHE_CAPACITY
+    if capacity < 0:
+        raise ValueError(f"plan cache capacity must be >= 0, got {capacity}")
+    with _CACHE_LOCK:
+        _PLAN_CACHE_CAPACITY = int(capacity)
+        while len(_PLAN_CACHE) > _PLAN_CACHE_CAPACITY:
+            _PLAN_CACHE.popitem(last=False)
 
 
 def build_plan(
@@ -424,12 +487,13 @@ def build_plan(
     k = min(k, num_blocks)
 
     key = (sizes, m, k)
-    cached = _PLAN_CACHE.get(key)
-    if cached is not None:
-        _PLAN_CACHE.move_to_end(key)
-        _PLAN_STATS["hits"] += 1
-        return cached
-    _PLAN_STATS["misses"] += 1
+    with _CACHE_LOCK:
+        cached = _PLAN_CACHE.get(key)
+        if cached is not None:
+            _PLAN_CACHE.move_to_end(key)
+            _PLAN_STATS["hits"] += 1
+            return cached
+        _PLAN_STATS["misses"] += 1
 
     chunk_sizes = [num_blocks // k + (1 if i < num_blocks % k else 0) for i in range(k)]
     bounds: List[Tuple[int, int]] = []
@@ -449,9 +513,15 @@ def build_plan(
         halo_bounds=halos,
         offsets=tuple(offsets),
     )
-    _PLAN_CACHE[key] = plan
-    while len(_PLAN_CACHE) > _PLAN_CACHE_CAPACITY:
-        _PLAN_CACHE.popitem(last=False)
+    with _CACHE_LOCK:
+        # A racing thread may have built the same plan between the lookup and
+        # here; keep its entry so hits keep returning one shared object.
+        existing = _PLAN_CACHE.get(key)
+        if existing is not None:
+            return existing
+        _PLAN_CACHE[key] = plan
+        while len(_PLAN_CACHE) > _PLAN_CACHE_CAPACITY:
+            _PLAN_CACHE.popitem(last=False)
     return plan
 
 

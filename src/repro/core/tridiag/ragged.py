@@ -32,19 +32,16 @@ its batch index. (Silently fusing a short diagonal would shift every
 subsequent system's rows and corrupt *all* their solutions, which is fatal in
 the serving path where one bad request rides with innocent neighbours.)
 
-API example::
+API example (the facade is the front door; ``RaggedPartitionSolver`` and
+``solve_ragged`` survive as deprecated wrappers over it)::
 
-    from repro.core.tridiag.ragged import RaggedPartitionSolver, solve_ragged
+    from repro.api import SolverConfig, TridiagSession
 
     systems = [(dl1, d1, du1, b1), (dl2, d2, du2, b2)]   # sizes 200 and 5000
-    xs = solve_ragged(systems, m=10, num_chunks=8)       # list of solutions
-
-    solver = RaggedPartitionSolver(m=10, policy=HeuristicChunkPolicy(heur))
-    xs, timing = solver.solve_timed(systems)
-
-Like every planned frontend, the solver takes ``backend=`` to pick the stage
-implementation — ``"pallas"`` drives the ragged fused layout through the
-Pallas stage-1/stage-3 kernels (`repro.core.tridiag.plan.PallasBackend`).
+    session = TridiagSession(
+        SolverConfig(m=10, policy=HeuristicChunkPolicy(heur), backend="pallas")
+    )
+    xs, timing = session.solve_many_timed(systems)       # list of solutions
 """
 
 from __future__ import annotations
@@ -56,9 +53,7 @@ import numpy as np
 from repro.core.tridiag.plan import (
     ChunkPolicy,
     ChunkTiming,
-    PlanExecutor,
     SolvePlan,
-    build_plan,
     effective_size,
 )
 
@@ -129,15 +124,30 @@ def split_ragged(x: np.ndarray, sizes: Sequence[int]) -> List[np.ndarray]:
     return [x[..., lo:hi] for lo, hi in zip(offsets[:-1], offsets[1:])]
 
 
+def _session_for(m, num_chunks, policy, backend):
+    """Equivalent TridiagSession config for the legacy ctor arguments."""
+    from repro.core.tridiag.api import SolverConfig, TridiagSession
+
+    return TridiagSession(
+        SolverConfig(
+            m=m,
+            num_chunks=None if policy is not None else num_chunks,
+            policy=policy,
+            backend=backend if backend is not None else "reference",
+        )
+    )
+
+
 class RaggedPartitionSolver:
-    """Thin frontend: fuse mixed-size systems, build a plan, execute it.
+    """Deprecated: use ``repro.api.TridiagSession(...).solve_many(...)``.
 
     ``policy`` (a :class:`~repro.core.tridiag.plan.ChunkPolicy`) prices each
     batch by effective size at solve time; a fixed ``num_chunks`` is the
     no-policy baseline. Chunks slice the fused block axis, so they span system
     boundaries exactly as in the same-size batched solver. ``backend`` picks
     the stage implementation (``"reference"``/``"pallas"`` or a
-    :class:`~repro.core.tridiag.plan.StageBackend` instance).
+    :class:`~repro.core.tridiag.plan.StageBackend` instance). All calls
+    delegate to an equivalently-configured session.
     """
 
     def __init__(
@@ -148,19 +158,24 @@ class RaggedPartitionSolver:
         policy: Optional[ChunkPolicy] = None,
         backend=None,
     ):
-        if num_chunks < 1:
-            raise ValueError("num_chunks must be >= 1")
+        import warnings
+
+        warnings.warn(
+            "RaggedPartitionSolver is deprecated: use repro.api."
+            "TridiagSession(SolverConfig(m=..., policy=... or num_chunks=..., "
+            "backend=...)).solve_many(...)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         if policy is not None and num_chunks != 1:
             raise ValueError("pass num_chunks or policy, not both")
         self.m = m
         self.num_chunks = num_chunks
         self.policy = policy
-        self._executor = PlanExecutor(backend=backend)
+        self._session = _session_for(m, num_chunks, policy, backend)
 
     def plan_for(self, sizes: Sequence[int]) -> SolvePlan:
-        if self.policy is not None:
-            return build_plan(sizes, self.m, policy=self.policy)
-        return build_plan(sizes, self.m, num_chunks=self.num_chunks)
+        return self._session.plan_for(tuple(sizes))
 
     def solve(self, systems: Sequence[System]) -> List[np.ndarray]:
         xs, _ = self.solve_timed(systems)
@@ -169,10 +184,7 @@ class RaggedPartitionSolver:
     def solve_timed(
         self, systems: Sequence[System]
     ) -> Tuple[List[np.ndarray], ChunkTiming]:
-        dl, d, du, b, sizes = fuse_ragged(systems)
-        plan = self.plan_for(sizes)
-        x, timing = self._executor.execute(plan, dl, d, du, b)
-        return split_ragged(x, sizes), timing
+        return self._session.solve_many_timed(systems)
 
 
 def solve_ragged(
@@ -183,7 +195,18 @@ def solve_ragged(
     policy: Optional[ChunkPolicy] = None,
     backend=None,
 ) -> List[np.ndarray]:
-    """One-shot ragged fused solve; returns the per-system solutions."""
-    return RaggedPartitionSolver(
-        m=m, num_chunks=num_chunks, policy=policy, backend=backend
-    ).solve(systems)
+    """One-shot ragged fused solve; returns the per-system solutions.
+
+    Deprecated: use ``repro.api.TridiagSession(...).solve_many(systems)``.
+    """
+    import warnings
+
+    warnings.warn(
+        "solve_ragged is deprecated: use repro.api.TridiagSession("
+        "SolverConfig(...)).solve_many(systems)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    if policy is not None and num_chunks != 1:
+        raise ValueError("pass num_chunks or policy, not both")
+    return _session_for(m, num_chunks, policy, backend).solve_many(systems)

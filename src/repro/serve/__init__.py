@@ -2,6 +2,7 @@ from repro.serve.steps import make_decode_step, make_prefill_step
 from repro.serve.solve import (
     AdmissionPolicy,
     BatchedSolveService,
+    SolveEngine,
     SolveRequest,
     make_batched_solve_step,
 )
@@ -11,6 +12,7 @@ __all__ = [
     "make_prefill_step",
     "AdmissionPolicy",
     "BatchedSolveService",
+    "SolveEngine",
     "SolveRequest",
     "make_batched_solve_step",
 ]

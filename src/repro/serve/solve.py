@@ -1,104 +1,45 @@
-"""Serving-side batched tridiagonal solving with deadline-driven admission.
+"""Legacy serving entry point — now a deprecated shim over the session engine.
 
-The production story of the reproduction (ROADMAP north star): solve requests
-arrive one system at a time and are dispatched as fused chunked solves whose
-chunk count is picked by the stream heuristic — the serving analogue of the
-paper picking ``num_str`` before launching the kernels.
+The serving story lives in :mod:`repro.core.tridiag.api` (re-exported as
+``repro.api``): a :class:`~repro.api.SolverConfig` names the admission knobs
+once and :meth:`~repro.api.TridiagSession.submit` returns a
+:class:`~repro.api.SolveFuture` resolved by the session's worker thread — the
+deadline fires without anyone calling ``poll()``.
 
-Admission replaces the PR-1 flush-only same-size queues: requests join one
-FIFO, and an :class:`AdmissionPolicy` decides when a batch leaves it —
-when ``max_batch`` requests are waiting, or when the oldest has waited
-``max_wait_ms``. Mixed sizes do **not** wait for size-mates: a heterogeneous
-prefix of the queue is fused by the ragged plan
-(`repro.core.tridiag.ragged`) and solved in one dispatch, priced by its
-effective size Σ nᵢ.
+:class:`BatchedSolveService` is preserved here with its original
+``submit/poll/flush`` contract for existing callers: it is a thin subclass of
+:class:`repro.core.tridiag.api.SolveEngine` (the rebuilt core that also backs
+the session) and emits a ``DeprecationWarning`` at construction. Migration::
 
-Usage::
+    # before                                   # after
+    svc = BatchedSolveService(                 cfg = SolverConfig(
+        heuristic=h,                               m=10,
+        admission=AdmissionPolicy(                 policy=HeuristicChunkPolicy(h),
+            max_batch=64, max_wait_ms=5.0))        max_batch=64, max_wait_ms=5.0)
+    svc.submit(SolveRequest(...))              with TridiagSession(cfg) as s:
+    done.update(svc.poll())      # polling!        fut = s.submit(SolveRequest(...))
+    done.update(svc.flush())                       x = fut.result(timeout=1.0)
 
-    from repro.core.autotune import fit_batched_stream_heuristic
-    from repro.core.streams import StreamSimulator
-    from repro.serve.solve import AdmissionPolicy, BatchedSolveService, SolveRequest
-
-    h = fit_batched_stream_heuristic(StreamSimulator(seed=1).dataset(batches=(1, 8, 64)))
-    svc = BatchedSolveService(
-        heuristic=h,
-        admission=AdmissionPolicy(max_batch=64, max_wait_ms=5.0),
-    )
-    for rid, (dl, d, du, b) in enumerate(systems):
-        svc.submit(SolveRequest(rid, dl, d, du, b))   # full batches dispatch here
-        done.update(svc.poll())                       # deadline-expired batches
-    done.update(svc.flush())                          # drain the tail
-
-Constructed without ``admission=``, the service keeps the PR-1 contract:
-``submit`` only enqueues and ``flush`` dispatches everything in ``max_batch``
-groups (now through the unified plan path, so mixed sizes still fuse).
+``SolveRequest`` and ``AdmissionPolicy`` moved to the api module; they are
+re-exported here unchanged.
 """
 
 from __future__ import annotations
 
-import math
 import time
-from dataclasses import dataclass
+import warnings
 from functools import partial
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.core.autotune.heuristic import BatchedStreamHeuristic
-from repro.core.tridiag.batched import solve_batched
-from repro.core.tridiag.plan import (
-    PlanExecutor,
-    build_plan,
-    effective_size,
-    price_chunks,
+from repro.core.tridiag.api import (  # noqa: F401  (compat re-exports)
+    AdmissionPolicy,
+    SolveEngine,
+    SolveRequest,
 )
-from repro.core.tridiag.ragged import fuse_ragged, split_ragged
-
-
-@dataclass
-class SolveRequest:
-    """One tridiagonal system to solve (the serving unit of work)."""
-
-    rid: int
-    dl: np.ndarray
-    d: np.ndarray
-    du: np.ndarray
-    b: np.ndarray
-
-    @property
-    def size(self) -> int:
-        return int(np.asarray(self.d).shape[-1])
-
-
-@dataclass(frozen=True)
-class AdmissionPolicy:
-    """When does a batch leave the queue?
-
-    ``max_batch``    dispatch as soon as this many requests are waiting;
-    ``max_wait_ms``  dispatch (a possibly partial batch) once the oldest
-                     request has waited this long — checked on :meth:`poll`;
-    ``allow_ragged`` fuse a mixed-size FIFO prefix into one ragged plan.
-                     When False, a batch only takes queue entries matching the
-                     head request's size (the PR-1 size-segregated behaviour,
-                     kept as the benchmark baseline).
-    """
-
-    max_batch: int = 64
-    max_wait_ms: float = math.inf
-    allow_ragged: bool = True
-
-    def __post_init__(self):
-        if self.max_batch < 1:
-            raise ValueError("max_batch must be >= 1")
-        if self.max_wait_ms < 0:
-            raise ValueError("max_wait_ms must be >= 0")
-
-
-@dataclass
-class _Pending:
-    req: SolveRequest
-    t_submit: float
+from repro.core.tridiag.batched import solve_batched
 
 
 def make_batched_solve_step(m: int = 10) -> Callable:
@@ -106,30 +47,17 @@ def make_batched_solve_step(m: int = 10) -> Callable:
     return jax.jit(partial(solve_batched, m=m))
 
 
-class BatchedSolveService:
-    """Admission-controlled fused solving of a request queue.
+class BatchedSolveService(SolveEngine):
+    """Deprecated: use ``repro.api.TridiagSession`` (``submit`` → future).
 
-    ``heuristic`` (a fitted :class:`BatchedStreamHeuristic`) picks the chunk
-    count per dispatch from its effective size Σ nᵢ (a same-size batch is the
-    n·B special case); without one the service falls back to a fixed
-    ``default_chunks``. All dispatches run through the plan/execute layer
-    (`repro.core.tridiag.plan`), whose module-level jit cache makes per-batch
-    solver construction free of retracing.
+    Original contract, fully preserved:
 
-    ``clock`` (default ``time.perf_counter``) is injectable so deadline tests
-    can drive virtual time; batch latency is always real wall time.
-
-    ``backend`` picks the stage implementation every dispatch runs on
-    (``"reference"`` jnp stages, ``"pallas"`` kernels, or a
-    :class:`~repro.core.tridiag.plan.StageBackend` instance); plans repeat per
-    batch composition and are memoised module-wide (the plan cache in
-    `repro.core.tridiag.plan`), so steady traffic neither replans nor
-    retraces.
-
-    Stats: ``stats["batches"]/["systems"]/["wall_s"]`` aggregate throughput
-    (``systems_per_sec``); ``stats["per_batch"]`` records one dict per
-    dispatch with the batch composition, chunk count, solve latency and the
-    requests' queue wait times.
+    - constructed without ``admission=``, ``submit`` only enqueues and
+      ``flush`` dispatches everything in ``max_batch`` groups (the PR-1
+      contract; mixed sizes still fuse via ragged plans);
+    - constructed with ``admission=``, full batches dispatch inside
+      ``submit`` and deadline-expired batches dispatch on ``poll()`` —
+      which is exactly the polling burden ``TridiagSession`` removes.
     """
 
     def __init__(
@@ -143,137 +71,30 @@ class BatchedSolveService:
         clock: Callable[[], float] = time.perf_counter,
         backend=None,
     ):
+        warnings.warn(
+            "BatchedSolveService is deprecated: build a repro.api.SolverConfig "
+            "and serve through TridiagSession.submit(), whose worker thread "
+            "fires deadlines without poll()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         if admission is None:
             # Legacy construction: submit only enqueues; batches form when
             # flush() (or an explicit poll()) runs.
             admission = AdmissionPolicy(max_batch=64 if max_batch is None else max_batch)
-            self._eager = False
+            eager = False
         else:
             if max_batch is not None:
                 raise ValueError(
                     "pass max_batch inside AdmissionPolicy when admission= is given"
                 )
-            self._eager = True
-        self.admission = admission
-        self.max_batch = admission.max_batch
-        self.heuristic = heuristic
-        self.m = m
-        self.default_chunks = default_chunks
-        self._clock = clock
-        self._executor = PlanExecutor(backend=backend)
-        self._queue: List[_Pending] = []
-        self._results: Dict[int, np.ndarray] = {}
-        self.stats = {"batches": 0, "systems": 0, "wall_s": 0.0, "per_batch": []}
-
-    # -- scheduling ----------------------------------------------------------
-    def submit(self, req: SolveRequest) -> None:
-        """Enqueue a request; with an explicit admission policy, full batches
-        dispatch immediately (results surface via :meth:`poll`/:meth:`flush`)."""
-        if req.size % self.m:
-            raise ValueError(
-                f"request {req.rid}: size {req.size} not divisible by m={self.m}"
-            )
-        self._queue.append(_Pending(req, self._clock()))
-        if self._eager:
-            self._admit(self._clock())
-
-    def pending(self) -> int:
-        return len(self._queue)
-
-    def pick_chunks(self, size: int, batch: int) -> int:
-        """Chunk count for a same-size (size × batch) dispatch."""
-        return self.pick_chunks_ragged((size,) * batch)
-
-    def pick_chunks_ragged(self, sizes: Sequence[int]) -> int:
-        """Chunk count for any dispatch, priced by its effective size Σ nᵢ
-        (same-size batches are the ``(n,)*B`` special case). Delegates to
-        `repro.core.tridiag.plan.price_chunks` — the *same* rule
-        `HeuristicChunkPolicy` applies, so a batch gets one chunk count no
-        matter which entry point prices it."""
-        if self.heuristic is None:
-            return self.default_chunks
-        return price_chunks(self.heuristic, tuple(sizes))
-
-    # -- admission -----------------------------------------------------------
-    def _deadline_expired(self, now: float) -> bool:
-        return (
-            bool(self._queue)
-            and (now - self._queue[0].t_submit) * 1e3 >= self.admission.max_wait_ms
+            eager = True
+        super().__init__(
+            m=m,
+            heuristic=heuristic,
+            default_chunks=default_chunks,
+            admission=admission,
+            eager=eager,
+            clock=clock,
+            backend=backend,
         )
-
-    def _admit(self, now: float) -> None:
-        """Dispatch while an admission trigger holds (max_batch or deadline)."""
-        while self._queue and (
-            len(self._queue) >= self.admission.max_batch
-            or self._deadline_expired(now)
-        ):
-            self._dispatch(self._take_group(), now)
-
-    def _take_group(self) -> List[_Pending]:
-        q = self._queue
-        if self.admission.allow_ragged:
-            take, self._queue = q[: self.max_batch], q[self.max_batch :]
-            return take
-        # Size-segregated baseline: only the head request's size-mates ride.
-        size0 = q[0].req.size
-        take, rest = [], []
-        for p in q:
-            if p.req.size == size0 and len(take) < self.max_batch:
-                take.append(p)
-            else:
-                rest.append(p)
-        self._queue = rest
-        return take
-
-    def poll(self, now: Optional[float] = None) -> Dict[int, np.ndarray]:
-        """Run deadline admission and drain finished results."""
-        now = self._clock() if now is None else now
-        self._admit(now)
-        return self._drain()
-
-    def flush(self) -> Dict[int, np.ndarray]:
-        """Dispatch everything pending; returns every undrained {rid: solution}."""
-        now = self._clock()
-        while self._queue:
-            self._dispatch(self._take_group(), now)
-        return self._drain()
-
-    # -- execution -----------------------------------------------------------
-    def _drain(self) -> Dict[int, np.ndarray]:
-        out, self._results = self._results, {}
-        return out
-
-    def _dispatch(self, group: List[_Pending], now: float) -> None:
-        reqs = [p.req for p in group]
-        sizes = tuple(r.size for r in reqs)
-        same_size = len(set(sizes)) == 1
-        k = self.pick_chunks_ragged(sizes)
-        t0 = time.perf_counter()
-        dl, d, du, b, sizes = fuse_ragged([(r.dl, r.d, r.du, r.b) for r in reqs])
-        plan = build_plan(sizes, self.m, num_chunks=k)
-        x, _ = self._executor.execute(plan, dl, d, du, b)
-        for r, xi in zip(reqs, split_ragged(x, sizes)):
-            # copy: split_ragged returns views, which would otherwise pin the
-            # whole fused solution for as long as any one result is retained
-            self._results[r.rid] = np.array(xi, copy=True)
-        dt = time.perf_counter() - t0
-        waits_ms = [(now - p.t_submit) * 1e3 for p in group]
-        self.stats["batches"] += 1
-        self.stats["systems"] += len(reqs)
-        self.stats["wall_s"] += dt
-        self.stats["per_batch"].append(
-            {
-                "systems": len(reqs),
-                "sizes": sizes,
-                "effective_size": effective_size(sizes),
-                "ragged": not same_size,
-                "num_chunks": plan.num_chunks,
-                "latency_ms": dt * 1e3,
-                "mean_wait_ms": float(np.mean(waits_ms)),
-                "max_wait_ms": float(np.max(waits_ms)),
-            }
-        )
-
-    @property
-    def systems_per_sec(self) -> float:
-        return self.stats["systems"] / max(self.stats["wall_s"], 1e-12)

@@ -1,0 +1,127 @@
+"""Thread-safety regression for the module-level plan/stage caches.
+
+Before the facade redesign both `plan._PLAN_CACHE` (an OrderedDict LRU) and
+the `jitted_stages` dicts were mutated without a lock. That was latent — the
+frontends were single-threaded — but `TridiagSession.submit` dispatches from
+a worker thread while synchronous verbs run on callers' threads, so
+interleaved `move_to_end`/`popitem`/insert could corrupt the LRU order,
+raise `KeyError`/`RuntimeError` mid-dispatch, or let the cache grow past
+capacity. These tests hammer both caches from many threads with eviction
+churn forced by a tiny capacity; under the pre-fix code they surface
+exceptions within a few hundred iterations.
+"""
+
+import threading
+
+import pytest
+
+from repro.core.tridiag import ensure_x64
+
+ensure_x64()
+
+from repro.core.tridiag import plan as plan_mod  # noqa: E402
+from repro.core.tridiag.plan import (  # noqa: E402
+    build_plan,
+    clear_plan_cache,
+    jitted_stages,
+    plan_cache_stats,
+    set_plan_cache_capacity,
+)
+
+
+@pytest.fixture
+def tiny_plan_cache():
+    """Force eviction churn: a 4-entry LRU with many distinct signatures."""
+    clear_plan_cache()
+    set_plan_cache_capacity(4)
+    try:
+        yield
+    finally:
+        set_plan_cache_capacity(1024)
+        clear_plan_cache()
+
+
+def test_build_plan_hammered_from_threads(tiny_plan_cache):
+    """8 threads × overlapping signature sets × evictions: no exceptions, a
+    consistent cache, and every returned plan laid out correctly."""
+    n_threads, iters = 8, 300
+    errors = []
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid):
+        try:
+            barrier.wait()
+            for i in range(iters):
+                # Overlapping signatures across threads (shared hits) plus a
+                # rotating tail (misses + evictions at capacity 4).
+                sizes = (60 * (1 + (i + tid) % 6),)
+                k = 1 + (i % 3)
+                plan = build_plan(sizes, 10, num_chunks=k)
+                assert plan.sizes == sizes
+                assert plan.num_chunks == min(k, plan.num_blocks)
+                assert plan.chunk_bounds[-1][1] == plan.num_blocks
+                if i % 50 == 0 and tid == 0:
+                    clear_plan_cache()  # concurrent reset must not corrupt
+        except Exception as e:  # pragma: no cover - the regression signal
+            errors.append((tid, repr(e)))
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    stats = plan_cache_stats()
+    assert stats["size"] <= 4  # capacity holds under concurrent eviction
+    assert stats["hits"] + stats["misses"] >= 0  # counters stayed coherent
+
+
+def test_jitted_stages_hammered_from_threads():
+    """Concurrent stage fetches across (m, backend) keys return one shared
+    callable pair per key — no torn inserts, no duplicate jits observed."""
+    n_threads, iters = 8, 200
+    results = [dict() for _ in range(n_threads)]
+    errors = []
+    barrier = threading.Barrier(n_threads)
+    ms = (10, 5, 20, 25)
+
+    def worker(tid):
+        try:
+            barrier.wait()
+            for i in range(iters):
+                m = ms[(i + tid) % len(ms)]
+                backend = ("reference", "pallas")[(i + tid) % 2]
+                pair = jitted_stages(m, backend)
+                prev = results[tid].setdefault((m, backend), pair)
+                # within one thread the cached pair must never change identity
+                assert prev[0] is pair[0] and prev[1] is pair[1]
+        except Exception as e:  # pragma: no cover
+            errors.append((tid, repr(e)))
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    # across threads too: one winner per key
+    for key in results[0]:
+        pairs = {id(r[key][0]) for r in results if key in r}
+        assert len(pairs) == 1
+
+
+def test_set_plan_cache_capacity_validates_and_evicts():
+    clear_plan_cache()
+    set_plan_cache_capacity(1024)
+    for k in range(1, 6):
+        build_plan((60,), 10, num_chunks=k)
+    assert plan_cache_stats()["size"] == 5
+    set_plan_cache_capacity(2)  # shrink: oldest three evicted
+    assert plan_cache_stats()["size"] == 2
+    with pytest.raises(ValueError, match=">= 0"):
+        set_plan_cache_capacity(-1)
+    set_plan_cache_capacity(0)  # 0 disables memoisation
+    build_plan((60,), 10, num_chunks=1)
+    assert plan_cache_stats()["size"] == 0
+    set_plan_cache_capacity(1024)
+    clear_plan_cache()

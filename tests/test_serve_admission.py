@@ -141,6 +141,26 @@ def test_submit_rejects_indivisible_size():
         svc.submit(SolveRequest(0, dl, d, du, b))
 
 
+@pytest.mark.parametrize("bad", ["dl", "du", "b"])
+def test_submit_rejects_mismatched_diagonals_naming_request(bad):
+    """Regression: a request whose diagonals disagree with req.size used to
+    sail through submit and explode later inside the fused dispatch with an
+    opaque shape error — riding in a batch of innocent neighbours. submit()
+    now validates and names the offending request id."""
+    svc = BatchedSolveService(m=10, max_batch=4)
+    dl, d, du, b, _ = make_diag_dominant_system(60, seed=0)
+    parts = {"dl": dl, "du": du, "b": b}
+    parts[bad] = parts[bad][:-1]  # one short diagonal
+    with pytest.raises(ValueError, match=rf"request 7: {bad} has shape"):
+        svc.submit(SolveRequest(7, parts["dl"], d, parts["du"], parts["b"]))
+    assert svc.pending() == 0  # never enqueued: no innocent batch poisoned
+
+    # a 2-D d is rejected up front too (solve_batched is the (B, n) door)
+    DL, D, DU, B, _ = make_diag_dominant_system(60, seed=1, batch=(2,))
+    with pytest.raises(ValueError, match="request 8: d must be 1-D"):
+        svc.submit(SolveRequest(8, DL, D, DU, B))
+
+
 # -------------------------------------------------------- admission triggers --
 def test_max_batch_admission_dispatches_on_submit():
     clock = FakeClock()
