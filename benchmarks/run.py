@@ -8,11 +8,19 @@ Usage:
   PYTHONPATH=src python -m benchmarks.run --skip-slow     # skip wall-clock benches
   PYTHONPATH=src python -m benchmarks.run --list          # registry (imports all
                                                           # bench modules; CI gate)
+  PYTHONPATH=src python -m benchmarks.run --only dispatch_latency \\
+      --json BENCH_dispatch.json                          # machine-readable dump
+
+``--json <path>`` writes every selected bench's results as one JSON object
+(``{bench: {header, rows, seconds}}`` plus a ``meta`` block with the
+timestamp and jax backend), so the perf trajectory can be recorded across
+PRs and diffed by tooling instead of eyeballing CSV blocks.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -33,6 +41,14 @@ def main() -> None:
         action="store_true",
         help="print the bench registry and exit (still imports every bench "
         "module, so a broken public entry point fails here)",
+    )
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="also write the selected benches' results to PATH as JSON "
+        "({bench: {header, rows, seconds}} + a meta block) so perf can be "
+        "recorded across PRs",
     )
     args = ap.parse_args()
 
@@ -58,6 +74,7 @@ def main() -> None:
             arch_steps,
             backend_throughput,
             batched_throughput,
+            dispatch_latency,
             ragged_throughput,
         )
 
@@ -66,6 +83,7 @@ def main() -> None:
             "batched_throughput": batched_throughput.batched_throughput,
             "ragged_throughput": ragged_throughput.ragged_throughput,
             "backend_throughput": backend_throughput.backend_throughput,
+            "dispatch_latency": dispatch_latency.dispatch_latency,
             "arch_steps": arch_steps.arch_step_costs,
         }
     benches.update(slow)
@@ -77,12 +95,51 @@ def main() -> None:
         return
 
     selected = {args.only: benches[args.only]} if args.only else benches
+    results = {}
     for name, fn in selected.items():
         t0 = time.time()
         header, rows = fn()
         _emit(name, header, rows)
-        print(f"# {name} took {time.time() - t0:.1f}s")
+        seconds = time.time() - t0
+        print(f"# {name} took {seconds:.1f}s")
+        results[name] = {
+            "header": [str(h) for h in header],
+            "rows": [[_jsonable(x) for x in r] for r in rows],
+            "seconds": round(seconds, 3),
+        }
+    if args.json:
+        _write_json(args.json, results)
     print("\nALL BENCHES DONE")
+
+
+def _jsonable(x):
+    """Numpy scalars → native Python; anything else non-JSON → str."""
+    if hasattr(x, "item"):
+        return x.item()
+    if isinstance(x, (str, int, float, bool)) or x is None:
+        return x
+    return str(x)
+
+
+def _write_json(path: str, results: dict) -> None:
+    import datetime
+
+    import jax
+
+    payload = {
+        "meta": {
+            "generated_at": datetime.datetime.now(datetime.timezone.utc)
+            .isoformat(timespec="seconds"),
+            "jax_backend": jax.default_backend(),
+            "argv": sys.argv[1:],
+        },
+        "benches": results,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {sum(len(b['rows']) for b in results.values())} rows "
+          f"across {len(results)} benches to {path}")
 
 
 if __name__ == "__main__":

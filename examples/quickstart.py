@@ -16,7 +16,15 @@ knobs) and a ``TridiagSession`` built from it serves every batch shape —
 plus the ML heuristic of the paper: fit it on a stream campaign, wrap it in a
 ``HeuristicChunkPolicy``, and the same session picks the optimum chunk
 ("virtual stream") count per dispatch.
+
+Under the default ``dispatch="auto"`` the plain verbs (and served batches)
+run the FUSED path — the whole three-stage solve compiled into one
+donated-buffer XLA dispatch, reduced solve on device — while the ``*_timed``
+verbs keep the staged per-chunk path whose phase breakdown the paper's
+analysis needs. Step 1b below shows the difference.
 """
+
+import time
 
 import numpy as np
 
@@ -46,11 +54,25 @@ def main():
     dl, d, du, b, x_true = make_diag_dominant_system(n, seed=0)
 
     with TridiagSession(cfg) as session:
-        # 1) one system through the chunked partition method
+        # 1) one system through the chunked partition method (solve_timed
+        #    runs the STAGED path, so the per-phase breakdown exists)
         x, timing = session.solve_timed(dl, d, du, b)
         print(f"solve         n={n:,}: max|x - x_true| = "
               f"{np.max(np.abs(x - x_true)):.3e}  "
               f"({timing.num_chunks} chunks, {timing.t_total_ms:.2f} ms)")
+
+        # 1b) the plain verb runs the FUSED path: one compiled XLA dispatch
+        #     for all three stages, reduced solve on device, donated buffers.
+        #     Both paths get a warm rerun so neither number carries compile
+        #     time.
+        _, staged_warm = session.solve_timed(dl, d, du, b)
+        session.solve(dl, d, du, b)  # warmup (compiles the fused executable)
+        t0 = time.perf_counter()
+        session.solve(dl, d, du, b)
+        t_fused_ms = (time.perf_counter() - t0) * 1e3
+        print(f"dispatch      staged {staged_warm.t_total_ms:.2f} ms vs "
+              f"fused {t_fused_ms:.2f} ms for the same plan "
+              f"({staged_warm.t_total_ms / max(t_fused_ms, 1e-9):.1f}x)")
 
         # 2) a batch of same-size systems, fused into one dispatch
         DL, D, DU, B, _ = make_diag_dominant_system(2_000, seed=1, batch=(8,))

@@ -8,6 +8,7 @@ docstring and the root README for the full tour.
 
 from repro.core.tridiag.api import (
     BACKEND_NAMES,
+    DISPATCH_MODES,
     AdmissionPolicy,
     SolveEngine,
     SolveFuture,
@@ -19,10 +20,16 @@ from repro.core.tridiag.plan import (
     BACKENDS,
     ChunkPolicy,
     FixedChunkPolicy,
+    FusedExecutor,
     HeuristicChunkPolicy,
     PallasBackend,
+    PlanExecutor,
     ReferenceBackend,
     StageBackend,
+    clear_executable_cache,
+    executable_cache_stats,
+    plan_cache_stats,
+    set_executable_cache_capacity,
 )
 
 __all__ = [
@@ -30,9 +37,12 @@ __all__ = [
     "BACKEND_NAMES",
     "BACKENDS",
     "ChunkPolicy",
+    "DISPATCH_MODES",
     "FixedChunkPolicy",
+    "FusedExecutor",
     "HeuristicChunkPolicy",
     "PallasBackend",
+    "PlanExecutor",
     "ReferenceBackend",
     "SolveEngine",
     "SolveFuture",
@@ -40,4 +50,8 @@ __all__ = [
     "SolverConfig",
     "StageBackend",
     "TridiagSession",
+    "clear_executable_cache",
+    "executable_cache_stats",
+    "plan_cache_stats",
+    "set_executable_cache_capacity",
 ]

@@ -93,6 +93,7 @@ from repro.core.tridiag.plan import (
     ChunkPolicy,
     ChunkTiming,
     FixedChunkPolicy,
+    FusedExecutor,
     HeuristicChunkPolicy,
     PallasBackend,
     PlanExecutor,
@@ -100,12 +101,16 @@ from repro.core.tridiag.plan import (
     SolvePlan,
     StageBackend,
     build_plan,
+    clear_executable_cache,
     clear_plan_cache,
     effective_size,
+    executable_cache_stats,
+    jitted_stage3_ghost,
     jitted_stages,
     plan_cache_stats,
     price_chunks,
     resolve_backend,
+    set_executable_cache_capacity,
 )
 from repro.core.tridiag.chunked import ChunkedPartitionSolver
 from repro.core.tridiag.batched import (
@@ -122,6 +127,7 @@ from repro.core.tridiag.ragged import (
     split_ragged,
 )
 from repro.core.tridiag.api import (
+    DISPATCH_MODES,
     AdmissionPolicy,
     SolveEngine,
     SolveFuture,
@@ -146,7 +152,9 @@ __all__ = [
     "BACKENDS",
     "ChunkPolicy",
     "ChunkTiming",
+    "DISPATCH_MODES",
     "FixedChunkPolicy",
+    "FusedExecutor",
     "HeuristicChunkPolicy",
     "PallasBackend",
     "PlanExecutor",
@@ -154,12 +162,16 @@ __all__ = [
     "SolvePlan",
     "StageBackend",
     "build_plan",
+    "clear_executable_cache",
     "clear_plan_cache",
     "effective_size",
+    "executable_cache_stats",
+    "jitted_stage3_ghost",
     "jitted_stages",
     "plan_cache_stats",
     "price_chunks",
     "resolve_backend",
+    "set_executable_cache_capacity",
     "ChunkedPartitionSolver",
     "BatchedPartitionSolver",
     "solve_batched",

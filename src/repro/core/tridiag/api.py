@@ -18,6 +18,13 @@ batch shape through four verbs:
     asynchronous serving — the request joins the session's admission queue
     and the future resolves when its batch dispatches.
 
+How each verb *executes* is the config's ``dispatch`` knob: ``"staged"``
+(per-chunk dispatch + host reduced solve, per-phase timing), ``"fused"``
+(the whole three-stage solve compiled into one donated-buffer XLA dispatch,
+reduced solve on device), or ``"auto"`` (default) — fused for the plain
+verbs and served batches, staged for the ``*_timed`` verbs so the
+measurement campaigns keep their phase breakdown.
+
 ``submit`` is backed by a daemon worker thread driving the
 :class:`AdmissionPolicy` loop, so a deadline (``max_wait_ms``) fires without
 anyone calling a ``poll()``: the worker sleeps exactly until the oldest
@@ -63,6 +70,7 @@ from repro.core.tridiag.plan import (
     BackendLike,
     ChunkPolicy,
     ChunkTiming,
+    FusedExecutor,
     PlanExecutor,
     SolvePlan,
     Sizes,
@@ -76,6 +84,7 @@ from repro.core.tridiag.ragged import System, fuse_ragged, split_ragged
 
 __all__ = [
     "AdmissionPolicy",
+    "DISPATCH_MODES",
     "SolveEngine",
     "SolveFuture",
     "SolveRequest",
@@ -126,6 +135,10 @@ class AdmissionPolicy:
             raise ValueError("max_wait_ms must be >= 0")
 
 
+#: Valid ``SolverConfig.dispatch`` values.
+DISPATCH_MODES = ("staged", "fused", "auto")
+
+
 # ------------------------------------------------------------------- config --
 @dataclass(frozen=True)
 class SolverConfig:
@@ -140,6 +153,15 @@ class SolverConfig:
     ``backend``    stage implementation: ``"auto"`` (default — Pallas kernels
                    on TPU hosts, reference jnp stages elsewhere),
                    ``"reference"``, ``"pallas"``, or a ``StageBackend``.
+    ``dispatch``   execution mode: ``"staged"`` (per-chunk dispatch + host
+                   reduced solve — the paper's layout, with the per-phase
+                   ``ChunkTiming`` breakdown), ``"fused"`` (the whole solve
+                   compiled into one donated-buffer XLA dispatch, reduced
+                   solve on device — fastest, but phase times are
+                   structurally unobservable), or ``"auto"`` (default):
+                   fused for the plain verbs and the serving path, staged
+                   for the ``*_timed`` verbs so measurement campaigns keep
+                   the breakdown the paper's Eq.-5 analysis needs.
     ``policy``     a :class:`~repro.core.tridiag.plan.ChunkPolicy` pricing
                    each dispatch (e.g. ``HeuristicChunkPolicy(fitted)``), or
                    None to use the fixed ``num_chunks``.
@@ -165,6 +187,7 @@ class SolverConfig:
     m: int = 10
     dtype: Optional[object] = None
     backend: BackendLike = "auto"
+    dispatch: str = "auto"
     policy: Optional[ChunkPolicy] = None
     num_chunks: Optional[int] = None
     max_batch: int = 64
@@ -195,6 +218,12 @@ class SolverConfig:
                     f"point; pass np.float64, np.float32, or None"
                 )
         resolve_backend(self.backend)  # raises naming the known backends
+        if self.dispatch not in DISPATCH_MODES:
+            raise ValueError(
+                f"dispatch={self.dispatch!r}: must be one of "
+                f"{sorted(DISPATCH_MODES)} ('auto' = fused solves, staged "
+                f"*_timed verbs)"
+            )
         if self.policy is not None:
             if not isinstance(self.policy, ChunkPolicy):
                 raise TypeError(
@@ -302,6 +331,12 @@ class SolveEngine:
     run through the plan/execute layer, whose module-level jit/plan caches
     make per-batch construction free of retracing and replanning.
 
+    ``dispatch`` selects the execution path: ``"auto"`` (default) and
+    ``"fused"`` serve each batch as ONE compiled XLA dispatch
+    (:class:`~repro.core.tridiag.plan.FusedExecutor` — device-side reduced
+    solve, donated buffers); ``"staged"`` keeps the per-chunk host-loop path
+    (:class:`~repro.core.tridiag.plan.PlanExecutor`).
+
     Results surface either through the ``on_result``/``on_error`` callbacks
     (the session's futures) or, with no callbacks, an internal ``{rid: x}``
     store drained by :meth:`poll`/:meth:`flush` (the legacy contract).
@@ -327,9 +362,14 @@ class SolveEngine:
         clock: Callable[[], float] = time.perf_counter,
         backend: BackendLike = None,
         dtype=None,
+        dispatch: str = "auto",
         on_result: Optional[Callable[[int, np.ndarray], None]] = None,
         on_error: Optional[Callable[[int, BaseException], None]] = None,
     ):
+        if dispatch not in DISPATCH_MODES:
+            raise ValueError(
+                f"dispatch={dispatch!r}: must be one of {sorted(DISPATCH_MODES)}"
+            )
         self.admission = admission if admission is not None else AdmissionPolicy()
         self.max_batch = self.admission.max_batch
         self.heuristic = heuristic
@@ -337,9 +377,18 @@ class SolveEngine:
         self.m = m
         self.default_chunks = default_chunks
         self.dtype = dtype
+        self.dispatch = dispatch
         self._eager = eager
         self._clock = clock
-        self._executor = PlanExecutor(backend=backend)
+        # Serving dispatches are plain solves (no phase breakdown consumed),
+        # so "auto" resolves to the fused single-dispatch path here; the
+        # engine always fuses request operands into fresh host arrays, so
+        # buffer donation never consumes a caller's array.
+        self._executor = (
+            PlanExecutor(backend=backend)
+            if dispatch == "staged"
+            else FusedExecutor(backend=backend)
+        )
         self._on_result = on_result
         self._on_error = on_error
         self._queue: List[_Pending] = []
@@ -557,6 +606,7 @@ class TridiagSession:
         self.config = (SolverConfig() if config is None else config).validate()
         self.backend = resolve_backend(self.config.backend)
         self._executor = PlanExecutor(backend=self.backend)
+        self._fused = FusedExecutor(backend=self.backend)
         if self.config.plan_cache_capacity is not None:
             set_plan_cache_capacity(self.config.plan_cache_capacity)
         self._cv = threading.Condition()
@@ -571,6 +621,7 @@ class TridiagSession:
             eager=False,  # the worker owns every dispatch
             backend=self.backend,
             dtype=self.config.dtype,
+            dispatch=self.config.dispatch,
             on_result=lambda rid, x: self._resolve_future(rid, value=x),
             on_error=lambda rid, e: self._resolve_future(rid, error=e),
         )
@@ -595,22 +646,46 @@ class TridiagSession:
             return x
         return np.asarray(x, dtype=self.config.dtype)
 
+    def _pick_executor(self, timed: bool):
+        """``dispatch`` routing: "staged"/"fused" are unconditional; "auto"
+        fuses plain solves but keeps the ``*_timed`` verbs on the staged path,
+        whose host round-trips are what make the per-phase ``ChunkTiming``
+        (the paper's Eq.-5 decomposition) observable."""
+        mode = self.config.dispatch
+        if mode == "fused" or (mode == "auto" and not timed):
+            return self._fused
+        return self._executor
+
     # -- synchronous verbs ---------------------------------------------------
     def solve(self, dl, d, du, b) -> np.ndarray:
-        """Solve one system (1-D diagonals; leading batch dims pass through)."""
-        return self.solve_timed(dl, d, du, b)[0]
+        """Solve one system (1-D diagonals; leading batch dims pass through).
+
+        Under ``dispatch="auto"``/``"fused"`` this is one compiled XLA
+        dispatch with donated operand buffers: numpy operands are always safe
+        to reuse (copied to device per call), but *device* arrays are
+        consumed by the solve — pass fresh ones, or use dispatch="staged".
+        """
+        return self._solve(dl, d, du, b, timed=False)[0]
 
     def solve_timed(self, dl, d, du, b) -> Tuple[np.ndarray, ChunkTiming]:
+        return self._solve(dl, d, du, b, timed=True)
+
+    def _solve(self, dl, d, du, b, *, timed: bool):
         dl, d, du, b = self._cast(dl, d, du, b)
-        n = int(np.asarray(d).shape[-1])
-        x, timing = self._executor.execute(self.plan_for(n), dl, d, du, b)
+        n = int(np.shape(d)[-1])
+        x, timing = self._pick_executor(timed).execute(
+            self.plan_for(n), dl, d, du, b
+        )
         return self._cast_out(x), timing
 
     def solve_batched(self, dl, d, du, b) -> np.ndarray:
         """Solve B same-size systems given as (B, n) operands."""
-        return self.solve_batched_timed(dl, d, du, b)[0]
+        return self._solve_batched(dl, d, du, b, timed=False)[0]
 
     def solve_batched_timed(self, dl, d, du, b) -> Tuple[np.ndarray, ChunkTiming]:
+        return self._solve_batched(dl, d, du, b, timed=True)
+
+    def _solve_batched(self, dl, d, du, b, *, timed: bool):
         dl, d, du, b = self._cast(dl, d, du, b)
         d_arr = np.asarray(d)
         if d_arr.ndim != 2:
@@ -621,20 +696,27 @@ class TridiagSession:
             )
         batch, n = d_arr.shape
         fused = fuse_systems(dl, d_arr, du, b)
-        x, timing = self._executor.execute(self.plan_for((n,) * batch), *fused)
+        x, timing = self._pick_executor(timed).execute(
+            self.plan_for((n,) * batch), *fused
+        )
         return split_systems(self._cast_out(x), batch), timing
 
     def solve_many(self, systems: Sequence[System]) -> List[np.ndarray]:
         """Solve a ragged list of ``(dl, d, du, b)`` systems in one dispatch."""
-        return self.solve_many_timed(systems)[0]
+        return self._solve_many(systems, timed=False)[0]
 
     def solve_many_timed(
         self, systems: Sequence[System]
     ) -> Tuple[List[np.ndarray], ChunkTiming]:
+        return self._solve_many(systems, timed=True)
+
+    def _solve_many(self, systems: Sequence[System], *, timed: bool):
         if self.config.dtype is not None:
             systems = [self._cast(*s) for s in systems]
         dl, d, du, b, sizes = fuse_ragged(systems)
-        x, timing = self._executor.execute(self.plan_for(sizes), dl, d, du, b)
+        x, timing = self._pick_executor(timed).execute(
+            self.plan_for(sizes), dl, d, du, b
+        )
         return split_ragged(self._cast_out(x), sizes), timing
 
     # -- asynchronous serving ------------------------------------------------
@@ -738,7 +820,8 @@ class TridiagSession:
         state = "closed" if self._closed else "open"
         return (
             f"TridiagSession(m={self.config.m}, backend={self.backend.name!r}, "
-            f"{state}, pending={self._engine.pending()})"
+            f"dispatch={self.config.dispatch!r}, {state}, "
+            f"pending={self._engine.pending()})"
         )
 
 

@@ -138,11 +138,14 @@ class BatchedPartitionSolver:
 
         self.m = m
         self.num_chunks = num_chunks
+        # dispatch pinned to "staged": the legacy classes predate the fused
+        # path and their contract is the bit-exact staged numerics.
         self._session = TridiagSession(
             SolverConfig(
                 m=m,
                 num_chunks=num_chunks,
                 backend=backend if backend is not None else "reference",
+                dispatch="staged",
             )
         )
 

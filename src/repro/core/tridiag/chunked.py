@@ -58,11 +58,14 @@ class ChunkedPartitionSolver:
         self.m = m
         self.num_chunks = num_chunks
         # Legacy default backend is the reference stages (None), not "auto".
+        # dispatch pinned to "staged": the legacy classes predate the fused
+        # path and their contract is the bit-exact staged numerics.
         self._session = TridiagSession(
             SolverConfig(
                 m=m,
                 num_chunks=num_chunks,
                 backend=backend if backend is not None else "reference",
+                dispatch="staged",
             )
         )
 

@@ -49,6 +49,36 @@ pure function of its signature, so repeated dispatches skip replanning.
 tests and capacity planning; ``set_plan_cache_capacity()`` resizes the LRU
 (``SolverConfig.plan_cache_capacity`` threads it through the facade).
 
+Dispatch modes
+--------------
+*When* the stages are dispatched is the third axis. The classic
+:class:`PlanExecutor` runs the **staged** path: per-chunk device dispatch
+from a Python loop, a host round-trip for the Stage-2 reduced solve (the
+paper keeps it on the CPU), then per-chunk back-substitution — the layout
+that makes the per-phase :class:`ChunkTiming` breakdown (the paper's Eq. 5
+decomposition) observable, and the path every ``measure_*`` campaign times.
+
+:class:`FusedExecutor` is the **fused** path: for a given
+``(plan, backend, operand dtypes, leading-batch shape)`` it traces the
+*entire* three-stage solve — chunk slicing via ``lax.slice`` inside the
+trace (halo blocks included), the reduced solve **on device**
+(:class:`StageBackend.make_reduced_solve`: the jnp Thomas scan by default,
+the ``repro.kernels.thomas`` Pallas kernel on the Pallas backend), and the
+ghost-block splicing of stage 3 — into ONE jitted callable with
+``donate_argnums`` on the four diagonals. Zero host round-trips between
+operand hand-off and solution split, and a single XLA dispatch instead of
+the staged path's ~10 ops per chunk. Executables live in a bounded,
+lock-protected LRU beside the plan cache
+(:func:`executable_cache_stats` / :func:`clear_executable_cache` /
+:func:`set_executable_cache_capacity`). Because the four diagonals are
+donated, callers passing *device* arrays give up ownership (numpy operands
+are copied to device per call and are always safe to reuse).
+
+``SolverConfig.dispatch`` selects the mode per session: ``"staged"``,
+``"fused"``, or ``"auto"`` (the default) — fused for the plain solve verbs
+and the serving path, staged for the ``*_timed`` verbs so measurement
+campaigns keep their phase breakdown.
+
 Both module-level caches (plans and jitted stages) are lock-protected:
 ``TridiagSession.submit`` solves from a worker thread while the session's
 synchronous verbs run on the caller's thread, so two threads legitimately
@@ -59,6 +89,7 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
@@ -70,6 +101,7 @@ import numpy as np
 
 from repro.core.tridiag import partition
 from repro.core.tridiag.reference import thomas_numpy
+from repro.core.tridiag.thomas import thomas as thomas_scan
 
 Sizes = Union[int, Sequence[int]]
 
@@ -113,6 +145,13 @@ class StageBackend:
     both safe to call per chunk (jitted or wrapping jitted kernels). Backends
     must be hashable (frozen dataclasses): they key the module-level stage
     cache together with ``m``.
+
+    ``make_reduced_solve()`` returns the *device-side* Stage-2 solver used by
+    the fused dispatch path (``(red_dl, red_d, red_du, red_b) -> s``, traced
+    into the fused executable). The default is the pure-jnp Thomas scan; the
+    Pallas backend routes 1-D/2-D reduced systems through the
+    ``repro.kernels.thomas`` kernel. The staged path never calls it — its
+    Stage 2 stays on the host (``thomas_numpy``), as in the paper.
     """
 
     name = "abstract"
@@ -122,6 +161,9 @@ class StageBackend:
 
     def make_stage3(self) -> Callable:
         raise NotImplementedError
+
+    def make_reduced_solve(self) -> Callable:
+        return thomas_scan
 
 
 @dataclass(frozen=True)
@@ -198,6 +240,21 @@ class PallasBackend(StageBackend):
 
         return stage3
 
+    def make_reduced_solve(self) -> Callable:
+        from repro.kernels.thomas.ops import thomas_pallas
+
+        def reduced_solve(red_dl, red_d, red_du, red_b):
+            # The kernel's grid is (batch,)-tiled: 1-D and 2-D reduced
+            # systems route through it; exotic extra leading dims fall back
+            # to the scan (they only arise on the reference stages anyway).
+            if jnp.asarray(red_d).ndim <= 2:
+                return thomas_pallas(
+                    red_dl, red_d, red_du, red_b, interpret=self.interpret
+                )
+            return thomas_scan(red_dl, red_d, red_du, red_b)
+
+        return reduced_solve
+
 
 @dataclass(frozen=True)
 class AutoBackend(StageBackend):
@@ -219,6 +276,9 @@ class AutoBackend(StageBackend):
 
     def make_stage3(self) -> Callable:
         return self.resolve().make_stage3()
+
+    def make_reduced_solve(self) -> Callable:
+        return self.resolve().make_reduced_solve()
 
 
 #: Registry consulted when ``backend=`` is given as a string; keys are the
@@ -266,6 +326,7 @@ def resolve_backend(backend: BackendLike) -> StageBackend:
 _CACHE_LOCK = threading.RLock()
 _STAGE1_CACHE: Dict[Tuple[int, StageBackend], Callable] = {}
 _STAGE3_CACHE: Dict[StageBackend, Callable] = {}
+_STAGE3_GHOST_CACHE: Dict[StageBackend, Callable] = {}
 
 
 def jitted_stages(m: int, backend: BackendLike = None) -> Tuple[Callable, Callable]:
@@ -280,6 +341,26 @@ def jitted_stages(m: int, backend: BackendLike = None) -> Tuple[Callable, Callab
         if backend not in _STAGE3_CACHE:
             _STAGE3_CACHE[backend] = backend.make_stage3()
         return _STAGE1_CACHE[key], _STAGE3_CACHE[backend]
+
+
+def jitted_stage3_ghost(backend: BackendLike = None) -> Callable:
+    """Cached jitted ``(coeffs, s_chunk, s_left_edge) -> x`` per backend.
+
+    One dispatch per chunk for the whole ghost-splice + back-substitution:
+    the ghost-block construction of :func:`_stage3_with_ghost` (seven
+    ``zeros_like`` + eight concatenates + the stage-3 call + a slice) used to
+    issue ~10 tiny device ops from Python per chunk; jitting the helper fuses
+    them into one executable per chunk shape.
+    """
+    backend = resolve_backend(backend)
+    with _CACHE_LOCK:
+        fn = _STAGE3_GHOST_CACHE.get(backend)
+        if fn is None:
+            if backend not in _STAGE3_CACHE:
+                _STAGE3_CACHE[backend] = backend.make_stage3()
+            fn = jax.jit(partial(_stage3_with_ghost, _STAGE3_CACHE[backend]))
+            _STAGE3_GHOST_CACHE[backend] = fn
+        return fn
 
 
 # ------------------------------------------------------------ chunk policies --
@@ -525,6 +606,46 @@ def build_plan(
     return plan
 
 
+# ------------------------------------------------------- executable cache --
+# The fused dispatch path compiles one end-to-end executable per
+# (plan, backend, donate, operand dtypes, leading-batch shape) signature.
+# Executables are much heavier than plans (a full XLA compilation each), so
+# they get their own bounded LRU beside the plan cache, guarded by the same
+# _CACHE_LOCK (sessions hit it from worker + caller threads concurrently).
+_EXEC_CACHE_CAPACITY = 128
+_EXEC_CACHE: "OrderedDict[Tuple, Callable]" = OrderedDict()
+_EXEC_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def executable_cache_stats() -> Dict[str, int]:
+    """Hit/miss/eviction counters of the fused-executable LRU (plus size)."""
+    with _CACHE_LOCK:
+        return {**_EXEC_STATS, "size": len(_EXEC_CACHE)}
+
+
+def clear_executable_cache() -> None:
+    """Empty the fused-executable LRU and reset its counters (test hook)."""
+    with _CACHE_LOCK:
+        _EXEC_CACHE.clear()
+        _EXEC_STATS["hits"] = 0
+        _EXEC_STATS["misses"] = 0
+        _EXEC_STATS["evictions"] = 0
+
+
+def set_executable_cache_capacity(capacity: int) -> None:
+    """Resize the fused-executable LRU (process-wide); 0 disables caching
+    (every fused dispatch then rebuilds + recompiles — only useful to bound
+    memory under adversarial never-repeating traffic)."""
+    global _EXEC_CACHE_CAPACITY
+    if capacity < 0:
+        raise ValueError(f"executable cache capacity must be >= 0, got {capacity}")
+    with _CACHE_LOCK:
+        _EXEC_CACHE_CAPACITY = int(capacity)
+        while len(_EXEC_CACHE) > _EXEC_CACHE_CAPACITY:
+            _EXEC_CACHE.popitem(last=False)
+            _EXEC_STATS["evictions"] += 1
+
+
 # -------------------------------------------------------------- the executor --
 class PlanExecutor:
     """Runs stage-1 dispatch, host reduced solve and stage-3 from a plan.
@@ -551,13 +672,23 @@ class PlanExecutor:
         b: np.ndarray,
     ) -> Tuple[np.ndarray, ChunkTiming]:
         m = plan.m
-        n = np.asarray(d).shape[-1]
+        n = int(np.shape(d)[-1])
         if n != plan.total_size:
             raise ValueError(
                 f"operands have {n} rows but the plan lays out {plan.total_size}"
             )
-        row = lambda a, lo, hi: np.asarray(a)[..., lo * m : hi * m]
-        stage1, stage3 = jitted_stages(m, self.backend)
+
+        def row(a, lo, hi):
+            # Fast path: operands already on device slice lazily — no host
+            # copy, no device_put (the PR-3 ROADMAP follow-up's staged half).
+            if isinstance(a, jax.Array):
+                return a[..., lo * m : hi * m]
+            return jax.device_put(
+                np.ascontiguousarray(np.asarray(a)[..., lo * m : hi * m])
+            )  # H2D analogue
+
+        stage1, _ = jitted_stages(m, self.backend)
+        stage3_ghost = jitted_stage3_ghost(self.backend)
 
         t0 = time.perf_counter()
         # ---- Stage 1: dispatch every chunk without blocking (the "streams").
@@ -567,10 +698,7 @@ class PlanExecutor:
         # (recomputed by the owner chunk) — the standard halo-exchange trick.
         coeffs: List[partition.PartitionCoeffs] = []
         for (lo, hi), (_, hi_halo) in zip(plan.chunk_bounds, plan.halo_bounds):
-            chunk = [
-                jax.device_put(np.ascontiguousarray(row(a, lo, hi_halo)))
-                for a in (dl, d, du, b)
-            ]  # H2D analogue
+            chunk = [row(a, lo, hi_halo) for a in (dl, d, du, b)]
             c = stage1(*chunk)
             nb = hi - lo
             c = partition.PartitionCoeffs(
@@ -595,15 +723,17 @@ class PlanExecutor:
         t2 = time.perf_counter()
 
         # ---- Stage 3: per-chunk back-substitution; chunk p needs s_{p-1}, s_p.
+        # One jitted dispatch per chunk: the ghost splice is fused into the
+        # cached stage3_ghost callable instead of ~10 tiny ops from Python.
         outs = []
         for (lo, hi), c in zip(plan.chunk_bounds, coeffs):
-            s_chunk = jnp.asarray(s[..., lo:hi])
+            s_chunk = s[..., lo:hi]
             s_left_edge = (
-                jnp.zeros_like(s_chunk[..., :1])
+                np.zeros_like(s_chunk[..., :1])
                 if lo == 0
-                else jnp.asarray(s[..., lo - 1 : lo])
+                else s[..., lo - 1 : lo]
             )
-            outs.append(_stage3_with_ghost(stage3, c, s_chunk, s_left_edge))
+            outs.append(stage3_ghost(c, s_chunk, s_left_edge))
         x = np.concatenate([np.asarray(o) for o in outs], axis=-1)
         t3 = time.perf_counter()
 
@@ -643,3 +773,196 @@ def _stage3_with_ghost(stage3_fn, coeffs, s_chunk, s_left_edge):
     x = stage3_fn(padded, s_padded)
     m = coeffs.y.shape[-1] + 1
     return x[..., m:]  # drop the ghost block
+
+
+# ------------------------------------------------------- the fused executor --
+# Serialises fused AOT compiles: the donated-buffer warning suppression uses
+# warnings.catch_warnings(), whose save/restore of the global filter list is
+# not thread-safe under concurrent compiles.
+_COMPILE_LOCK = threading.Lock()
+
+
+def _canonical_operand(a):
+    """Host operands in jax's canonical dtype (device arrays already are)."""
+    if isinstance(a, np.ndarray):
+        cd = jax.dtypes.canonicalize_dtype(a.dtype)
+        if a.dtype != cd:
+            return a.astype(cd)
+    return a
+
+
+def _trim_halo(c: partition.PartitionCoeffs, nb: int) -> partition.PartitionCoeffs:
+    """Drop the halo block's rows: its reduced row belongs to the next chunk
+    (which recomputes it as an owner), and its spikes only exist to close the
+    owner rows' right-neighbour references."""
+    return partition.PartitionCoeffs(
+        y=c.y[..., :nb, :],
+        v=c.v[..., :nb, :],
+        w=c.w[..., :nb, :],
+        red_dl=c.red_dl[..., :nb],
+        red_d=c.red_d[..., :nb],
+        red_du=c.red_du[..., :nb],
+        red_b=c.red_b[..., :nb],
+    )
+
+
+def _fused_callable(
+    plan: SolvePlan,
+    backend: StageBackend,
+    donate: bool,
+    avals: Sequence[jax.ShapeDtypeStruct],
+) -> Callable:
+    """Trace + AOT-compile the whole three-stage solve for ``plan``.
+
+    The chunk structure is baked in from the (static) plan: stage 1 slices
+    every chunk + halo out of the fused operands via ``lax.slice`` inside the
+    trace, the reduced rows are concatenated and solved ON DEVICE
+    (``backend.make_reduced_solve()``), and stage 3 splices each chunk's
+    ghost block in-trace. With ``donate=True`` the four diagonals are donated
+    to XLA (``donate_argnums=(0, 1, 2, 3)``), so the solve can reuse their
+    buffers in place — callers passing device arrays give up ownership.
+
+    Compilation happens HERE (``jit(...).lower(*avals).compile()``), not at
+    first call: only one of the four donated buffers can back the single
+    output, so XLA warns "Some donated buffers were not usable" once per
+    compile — doing the compile under a scoped ``catch_warnings`` keeps that
+    expected message out of callers' logs without mutating the process-wide
+    warning filters (user code jitting its own donating functions still
+    sees its own diagnostics).
+    """
+    m = plan.m
+    stage1, _ = jitted_stages(m, backend)
+    stage3_ghost = jitted_stage3_ghost(backend)
+    reduced_solve = backend.make_reduced_solve()
+
+    def fused(dl, d, du, b):
+        coeffs = []
+        for (lo, hi), (_, hi_halo) in zip(plan.chunk_bounds, plan.halo_bounds):
+            sl = lambda a: jax.lax.slice_in_dim(a, lo * m, hi_halo * m, axis=-1)
+            coeffs.append(_trim_halo(stage1(sl(dl), sl(d), sl(du), sl(b)), hi - lo))
+        red = [
+            jnp.concatenate([getattr(c, f) for c in coeffs], axis=-1)
+            if len(coeffs) > 1
+            else getattr(coeffs[0], f)
+            for f in ("red_dl", "red_d", "red_du", "red_b")
+        ]
+        s = reduced_solve(*red)
+        outs = []
+        for (lo, hi), c in zip(plan.chunk_bounds, coeffs):
+            s_chunk = jax.lax.slice_in_dim(s, lo, hi, axis=-1)
+            s_left_edge = (
+                jnp.zeros_like(s[..., :1])
+                if lo == 0
+                else jax.lax.slice_in_dim(s, lo - 1, lo, axis=-1)
+            )
+            outs.append(stage3_ghost(c, s_chunk, s_left_edge))
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+
+    if not donate:
+        return jax.jit(fused)
+    jitted = jax.jit(fused, donate_argnums=(0, 1, 2, 3))
+    # catch_warnings mutates the process-global filter list, so concurrent
+    # compiles must not interleave with it (a racing restore would leak the
+    # warning or clobber another thread's filters). _COMPILE_LOCK serialises
+    # only the compile itself — cache lookups under _CACHE_LOCK stay free.
+    with _COMPILE_LOCK, warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        return jitted.lower(*avals).compile()
+
+
+class FusedExecutor:
+    """Single-dispatch execution of a :class:`SolvePlan`: the whole solve is
+    one compiled XLA program per ``(plan, backend, dtypes, batch-shape)``.
+
+    Where :class:`PlanExecutor` dispatches each chunk from a Python loop and
+    round-trips through the host for the Stage-2 reduced solve (the paper's
+    CPU stage — which is what makes its phase breakdown measurable), this
+    executor trades observability for latency: zero host round-trips between
+    operand hand-off and solution split, one dispatch regardless of chunk
+    count. The returned :class:`ChunkTiming` therefore carries only
+    ``t_total_ms`` — per-phase times are structurally unobservable inside a
+    fused executable (use the staged path for the Eq.-5 campaigns).
+
+    ``donate=True`` (default) donates the four diagonals to the executable;
+    numpy operands are copied to device per call (always safe to reuse),
+    device-array operands are CONSUMED — re-using one afterwards raises
+    jax's donated-buffer error. Pass ``donate=False`` (or dispatch staged)
+    to keep device operands alive.
+
+    Executables are cached in the module-level LRU (`executable_cache_stats`)
+    under `_CACHE_LOCK`, so sessions can hit it from caller + worker threads.
+    """
+
+    def __init__(self, backend: BackendLike = None, *, donate: bool = True):
+        self.backend = resolve_backend(backend)
+        self.donate = donate
+
+    def _executable(self, plan: SolvePlan, ops: Sequence) -> Callable:
+        key = (
+            plan,
+            self.backend,
+            self.donate,
+            tuple(np.dtype(jax.dtypes.canonicalize_dtype(a.dtype)).name for a in ops),
+            tuple(a.shape[:-1] for a in ops),
+        )
+        with _CACHE_LOCK:
+            fn = _EXEC_CACHE.get(key)
+            if fn is not None:
+                _EXEC_CACHE.move_to_end(key)
+                _EXEC_STATS["hits"] += 1
+                return fn
+            _EXEC_STATS["misses"] += 1
+        # Build (trace + compile) outside the lock: compilation is the
+        # expensive part, and a racing builder is harmless (first one in
+        # the cache wins; both executables are equivalent).
+        avals = [
+            jax.ShapeDtypeStruct(a.shape, jax.dtypes.canonicalize_dtype(a.dtype))
+            for a in ops
+        ]
+        fn = _fused_callable(plan, self.backend, self.donate, avals)
+        with _CACHE_LOCK:
+            existing = _EXEC_CACHE.get(key)
+            if existing is not None:
+                return existing
+            if _EXEC_CACHE_CAPACITY > 0:
+                _EXEC_CACHE[key] = fn
+                while len(_EXEC_CACHE) > _EXEC_CACHE_CAPACITY:
+                    _EXEC_CACHE.popitem(last=False)
+                    _EXEC_STATS["evictions"] += 1
+        return fn
+
+    def execute(
+        self,
+        plan: SolvePlan,
+        dl,
+        d,
+        du,
+        b,
+    ) -> Tuple[np.ndarray, ChunkTiming]:
+        ops = [
+            a if isinstance(a, (np.ndarray, jax.Array)) else np.asarray(a)
+            for a in (dl, d, du, b)
+        ]
+        # The AOT-compiled executable is strict about argument dtypes; mirror
+        # jit's canonicalization up front (a no-op unless e.g. fp64 operands
+        # arrive while x64 is disabled).
+        ops = [_canonical_operand(a) for a in ops]
+        n = ops[1].shape[-1]
+        if n != plan.total_size:
+            raise ValueError(
+                f"operands have {n} rows but the plan lays out {plan.total_size}"
+            )
+        fn = self._executable(plan, ops)
+        t0 = time.perf_counter()
+        x = np.asarray(fn(*ops))  # blocks until the solution is on the host
+        t1 = time.perf_counter()
+        return x, ChunkTiming(
+            num_chunks=plan.num_chunks,
+            t_stage1_ms=0.0,
+            t_stage2_ms=0.0,
+            t_stage3_ms=0.0,
+            t_total_ms=(t1 - t0) * 1e3,
+            n=int(n),
+        )

@@ -128,12 +128,15 @@ def _session_for(m, num_chunks, policy, backend):
     """Equivalent TridiagSession config for the legacy ctor arguments."""
     from repro.core.tridiag.api import SolverConfig, TridiagSession
 
+    # dispatch pinned to "staged": the legacy frontends predate the fused
+    # path and their contract is the bit-exact staged numerics.
     return TridiagSession(
         SolverConfig(
             m=m,
             num_chunks=None if policy is not None else num_chunks,
             policy=policy,
             backend=backend if backend is not None else "reference",
+            dispatch="staged",
         )
     )
 

@@ -1,4 +1,12 @@
-"""Jitted public wrapper for the batched Thomas Pallas kernel."""
+"""Jitted public wrapper for the batched Thomas Pallas kernel.
+
+Besides its original role (B independent solves), this kernel is the
+device-side Stage-2 reduced solver of the fused dispatch path:
+``repro.core.tridiag.plan.PallasBackend.make_reduced_solve`` traces
+:func:`thomas_pallas` into the single-dispatch fused executable (1-D reduced
+systems ride the batch-1 path below), so a fused Pallas solve keeps all
+three partition stages on device.
+"""
 
 from __future__ import annotations
 

@@ -58,6 +58,12 @@ class BatchedSolveService(SolveEngine):
     - constructed with ``admission=``, full batches dispatch inside
       ``submit`` and deadline-expired batches dispatch on ``poll()`` —
       which is exactly the polling burden ``TridiagSession`` removes.
+
+    ``dispatch`` rides along to the engine. The default here is ``"staged"``
+    — like the other deprecated frontends, this shim's contract is the
+    bit-exact pre-fused numerics; pass ``dispatch="auto"``/``"fused"`` to
+    opt in to the single-dispatch fused path (or migrate to
+    ``TridiagSession``, whose default already serves fused).
     """
 
     def __init__(
@@ -70,6 +76,7 @@ class BatchedSolveService(SolveEngine):
         admission: Optional[AdmissionPolicy] = None,
         clock: Callable[[], float] = time.perf_counter,
         backend=None,
+        dispatch: str = "staged",
     ):
         warnings.warn(
             "BatchedSolveService is deprecated: build a repro.api.SolverConfig "
@@ -97,4 +104,5 @@ class BatchedSolveService(SolveEngine):
             eager=eager,
             clock=clock,
             backend=backend,
+            dispatch=dispatch,
         )

@@ -1,0 +1,265 @@
+"""Fused single-dispatch execution path: staged-vs-fused parity on every
+planned path (single, batched, ragged, served) × fp64/fp32 × both backends
+from one shared SolverConfig, the fused-executable LRU (hit/miss/eviction
+stats, capacity, clear), donation semantics, and a two-thread session hammer
+over the new cache."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.tridiag import ensure_x64
+
+ensure_x64()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.api import (  # noqa: E402
+    DISPATCH_MODES,
+    SolveEngine,
+    SolveRequest,
+    SolverConfig,
+    TridiagSession,
+)
+from repro.core.tridiag.plan import (  # noqa: E402
+    FusedExecutor,
+    PlanExecutor,
+    build_plan,
+    clear_executable_cache,
+    executable_cache_stats,
+    set_executable_cache_capacity,
+)
+from repro.core.tridiag.reference import (  # noqa: E402
+    make_diag_dominant_system,
+    thomas_numpy,
+)
+
+# The staged path solves Stage 2 in fp64 on the host regardless of operand
+# dtype; the fused path keeps the reduced solve on device in the operands'
+# precision, so fp32 gets the plain single-precision tolerance.
+TOL = {np.float64: 1e-11, np.float32: 2e-4}
+
+
+def _rel_err(x, ref):
+    return np.max(np.abs(np.asarray(x, np.float64) - ref)) / (
+        np.max(np.abs(ref)) + 1e-30
+    )
+
+
+def _mk_systems(sizes, dtype=np.float64, seed0=0):
+    return [
+        make_diag_dominant_system(n, seed=seed0 + i, dtype=dtype)[:4]
+        for i, n in enumerate(sizes)
+    ]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_executable_cache():
+    """Isolate the process-wide executable LRU per test (stats + capacity)."""
+    clear_executable_cache()
+    yield
+    set_executable_cache_capacity(128)
+    clear_executable_cache()
+
+
+# ------------------------------------------------------------------ parity ---
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+def test_fused_matches_staged_on_all_paths(backend, dtype):
+    """One shared config, two dispatch modes: identical-within-tolerance
+    solutions on the single, batched and ragged paths."""
+    base = SolverConfig(m=10, num_chunks=3, backend=backend, dtype=dtype)
+    staged = TridiagSession(base.replace(dispatch="staged"))
+    fused = TridiagSession(base.replace(dispatch="fused"))
+    tol = TOL[dtype]
+
+    dl, d, du, b, _ = make_diag_dominant_system(300, seed=0, dtype=dtype)
+    ref = thomas_numpy(dl, d, du, b)
+    xs, xf = staged.solve(dl, d, du, b), fused.solve(dl, d, du, b)
+    assert _rel_err(xs, ref) < tol and _rel_err(xf, ref) < tol
+    np.testing.assert_allclose(xf, xs, rtol=tol, atol=tol)
+
+    DL, D, DU, B, _ = make_diag_dominant_system(120, seed=1, batch=(3,), dtype=dtype)
+    xbs = staged.solve_batched(DL, D, DU, B)
+    xbf = fused.solve_batched(DL, D, DU, B)
+    for i in range(3):
+        ref = thomas_numpy(DL[i], D[i], DU[i], B[i])
+        assert _rel_err(xbf[i], ref) < tol
+    np.testing.assert_allclose(xbf, xbs, rtol=tol, atol=tol)
+
+    systems = _mk_systems((60, 240, 120), dtype=dtype, seed0=2)
+    for xi_s, xi_f, s in zip(
+        staged.solve_many(systems), fused.solve_many(systems), systems
+    ):
+        assert _rel_err(xi_f, thomas_numpy(*s)) < tol
+        np.testing.assert_allclose(xi_f, xi_s, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_fused_serving_path_matches_oracle(backend):
+    """submit() under the default dispatch="auto" serves each batch as one
+    fused dispatch; every future's solution sits on the fp64 oracle."""
+    cfg = SolverConfig(m=10, num_chunks=2, backend=backend, max_wait_ms=5.0)
+    assert cfg.dispatch == "auto"
+    systems = _mk_systems((60, 120, 60, 240), seed0=7)
+    with TridiagSession(cfg) as session:
+        futs = [
+            session.submit(SolveRequest(rid, *s)) for rid, s in enumerate(systems)
+        ]
+        for fut, s in zip(futs, systems):
+            assert _rel_err(fut.result(timeout=30.0), thomas_numpy(*s)) < 1e-11
+    assert session.stats["batches"] >= 1
+
+
+def test_engine_dispatch_selection():
+    eng_auto = SolveEngine(m=10)
+    eng_fused = SolveEngine(m=10, dispatch="fused")
+    eng_staged = SolveEngine(m=10, dispatch="staged")
+    assert isinstance(eng_auto._executor, FusedExecutor)
+    assert isinstance(eng_fused._executor, FusedExecutor)
+    assert isinstance(eng_staged._executor, PlanExecutor)
+    with pytest.raises(ValueError, match="dispatch"):
+        SolveEngine(m=10, dispatch="warp")
+
+
+def test_dispatch_validation_and_auto_timed_rule():
+    assert set(DISPATCH_MODES) == {"staged", "fused", "auto"}
+    with pytest.raises(ValueError, match="dispatch='warp'"):
+        SolverConfig(dispatch="warp").validate()
+
+    dl, d, du, b, _ = make_diag_dominant_system(200, seed=3)
+    auto = TridiagSession(SolverConfig(m=10, num_chunks=2))
+    # *_timed keeps the staged path (phase breakdown observable)...
+    _, timing = auto.solve_timed(dl, d, du, b)
+    assert timing.t_stage1_ms > 0.0 and timing.t_stage2_ms > 0.0
+    # ...while an explicit "fused" session reports only the total.
+    fused = TridiagSession(SolverConfig(m=10, num_chunks=2, dispatch="fused"))
+    _, timing = fused.solve_timed(dl, d, du, b)
+    assert timing.phases == (0.0, 0.0, 0.0)
+    assert timing.t_total_ms > 0.0
+    assert timing.num_chunks == 2
+
+
+# ---------------------------------------------------------------- donation ---
+def test_fused_donation_consumes_device_arrays_numpy_safe():
+    dl, d, du, b, _ = make_diag_dominant_system(200, seed=4)
+    plan = build_plan(200, 10, num_chunks=2)
+    ex = FusedExecutor("reference")
+    ref = thomas_numpy(dl, d, du, b)
+
+    # numpy operands: copied to device per call, always safe to reuse.
+    for _ in range(3):
+        x, _ = ex.execute(plan, dl, d, du, b)
+    assert _rel_err(x, ref) < 1e-11
+
+    # device operands: donated to the executable — consumed by the solve.
+    device_ops = [jnp.asarray(a) for a in (dl, d, du, b)]
+    x, _ = ex.execute(plan, *device_ops)
+    assert _rel_err(x, ref) < 1e-11
+    with pytest.raises(RuntimeError):
+        np.asarray(device_ops[0])
+
+    # donate=False keeps device operands alive (separate executable).
+    keep = FusedExecutor("reference", donate=False)
+    device_ops = [jnp.asarray(a) for a in (dl, d, du, b)]
+    x, _ = keep.execute(plan, *device_ops)
+    assert _rel_err(x, ref) < 1e-11
+    np.testing.assert_array_equal(np.asarray(device_ops[1]), d)
+
+
+# ----------------------------------------------------------- executable LRU --
+def test_executable_cache_hits_misses_evictions():
+    ex = FusedExecutor("reference")
+    dl, d, du, b, _ = make_diag_dominant_system(200, seed=5)
+
+    plan2 = build_plan(200, 10, num_chunks=2)
+    ex.execute(plan2, dl, d, du, b)
+    stats = executable_cache_stats()
+    assert (stats["misses"], stats["hits"], stats["size"]) == (1, 0, 1)
+
+    ex.execute(plan2, dl, d, du, b)
+    ex.execute(plan2, dl, d, du, b)
+    assert executable_cache_stats()["hits"] == 2
+
+    # A different chunking is a different plan signature -> new executable;
+    # a different dtype re-keys too.
+    plan3 = build_plan(200, 10, num_chunks=3)
+    ex.execute(plan3, dl, d, du, b)
+    ops32 = [np.asarray(a, np.float32) for a in (dl, d, du, b)]
+    ex.execute(plan2, *ops32)
+    stats = executable_cache_stats()
+    assert stats["misses"] == 3 and stats["size"] == 3
+
+    # Shrinking the capacity evicts oldest-first and counts it.
+    set_executable_cache_capacity(1)
+    stats = executable_cache_stats()
+    assert stats["size"] == 1 and stats["evictions"] == 2
+
+    # Capacity 0 disables caching: solves still work, nothing is retained.
+    set_executable_cache_capacity(0)
+    ex.execute(plan2, dl, d, du, b)
+    assert executable_cache_stats()["size"] == 0
+
+    with pytest.raises(ValueError):
+        set_executable_cache_capacity(-1)
+
+    clear_executable_cache()
+    stats = executable_cache_stats()
+    assert stats == {"hits": 0, "misses": 0, "evictions": 0, "size": 0}
+
+
+def test_executable_cache_eviction_churn_stays_correct():
+    """With a capacity smaller than the working set, every solve recompiles
+    or evicts — results must stay on the oracle throughout."""
+    set_executable_cache_capacity(2)
+    ex = FusedExecutor("reference")
+    cases = []
+    for i, (n, k) in enumerate([(100, 1), (200, 2), (300, 3), (400, 4)]):
+        dl, d, du, b, _ = make_diag_dominant_system(n, seed=10 + i)
+        cases.append((build_plan(n, 10, num_chunks=k), (dl, d, du, b)))
+    for _ in range(3):
+        for plan, ops in cases:
+            x, _ = ex.execute(plan, *ops)
+            assert _rel_err(x, thomas_numpy(*ops)) < 1e-11
+    stats = executable_cache_stats()
+    assert stats["size"] <= 2 and stats["evictions"] >= len(cases)
+
+
+def test_two_thread_session_hammer_over_executable_lru():
+    """Two sessions solving concurrently (distinct plans, shared tiny LRU):
+    the lock-protected cache must neither corrupt results nor deadlock."""
+    set_executable_cache_capacity(2)
+    cfg = SolverConfig(m=10, dispatch="fused")
+    sizes = (100, 200, 300)
+    problems = {
+        (n, k): make_diag_dominant_system(n, seed=n + k)[:4]
+        for n in sizes
+        for k in (1, 2)
+    }
+    refs = {key: thomas_numpy(*ops) for key, ops in problems.items()}
+    errors = []
+
+    def worker(tid):
+        session = TridiagSession(cfg.replace(num_chunks=1 + tid))
+        try:
+            for _ in range(10):
+                for n in sizes:
+                    ops = problems[(n, 1 + tid)]
+                    x = session.solve(*ops)
+                    if _rel_err(x, refs[(n, 1 + tid)]) > 1e-11:
+                        errors.append((tid, n, "off oracle"))
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append((tid, repr(e)))
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive(), "hammer thread deadlocked"
+    assert not errors, errors
+    stats = executable_cache_stats()
+    assert stats["size"] <= 2
+    assert stats["hits"] + stats["misses"] >= 60
