@@ -34,7 +34,11 @@ def _emit(name: str, header, rows):
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="run a subset: one bench name or a comma-separated list",
+    )
     ap.add_argument("--skip-slow", action="store_true")
     ap.add_argument(
         "--list",
@@ -76,6 +80,7 @@ def main() -> None:
             batched_throughput,
             dispatch_latency,
             ragged_throughput,
+            serving_stress,
         )
 
         slow = {
@@ -84,6 +89,7 @@ def main() -> None:
             "ragged_throughput": ragged_throughput.ragged_throughput,
             "backend_throughput": backend_throughput.backend_throughput,
             "dispatch_latency": dispatch_latency.dispatch_latency,
+            "serving_stress": serving_stress.serving_stress,
             "arch_steps": arch_steps.arch_step_costs,
         }
     benches.update(slow)
@@ -94,7 +100,16 @@ def main() -> None:
         print(f"# {len(benches)} benches registered")
         return
 
-    selected = {args.only: benches[args.only]} if args.only else benches
+    if args.only:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in benches]
+        if unknown:
+            raise SystemExit(
+                f"unknown bench(es) {unknown}; registered: {sorted(benches)}"
+            )
+        selected = {n: benches[n] for n in names}
+    else:
+        selected = benches
     results = {}
     for name, fn in selected.items():
         t0 = time.time()

@@ -1,0 +1,317 @@
+"""Serving under overload: throughput + shed rate vs offered load.
+
+The serving-hardening contract (`repro.api`): a bounded admission queue
+turns overload into *immediate, observable* shed load instead of unbounded
+memory and blown deadlines — the regime real-time GPU solver services live
+in. This bench hammers one `TridiagSession` from several submitter threads
+through `try_submit` (the backpressure-friendly verb) and reports, per
+offered-load level, how much work was accepted, shed, timed out, and
+actually solved per second.
+
+Reading the table: as the pacing interval shrinks (offered load grows past
+the session's service capacity), `accepted_per_sec` should plateau near
+capacity while `shed_rate` absorbs the excess — and `queue_high_water`
+must NEVER exceed `max_queue`. A growing queue or an unbounded high-water
+mark is the bug this layer exists to prevent.
+
+``--smoke`` (the CI gate) additionally injects dispatch faults mid-run and
+asserts the hardening invariants: with `max_queue=K` and batches failing
+mid-traffic, no future is ever left unresolved, the queue never exceeds K,
+rejected submits signal immediately (None from `try_submit`), solved
+results sit on the fp64 Thomas oracle, and the worker thread is still
+alive at the end.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run --only serving_stress
+  PYTHONPATH=src python -m benchmarks.serving_stress --smoke   # CI gate
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.tridiag.api import (
+    RequestTimedOutError,
+    SolveRequest,
+    SolverConfig,
+    TridiagSession,
+)
+from repro.core.tridiag.reference import make_diag_dominant_system, thomas_numpy
+
+#: Size of every served request. Single-size on purpose: the fused executor
+#: compiles one executable per batch COMPOSITION, so mixed-size traffic under
+#: an admission race produces an unbounded composition set and the bench
+#: would measure XLA compile storms instead of serving behaviour (ragged
+#: serving itself is covered by benchmarks/ragged_throughput.py). With one
+#: size there are exactly ``max_batch`` compositions, all pre-warmed.
+REQUEST_SIZE = 60
+
+
+class _FaultyExecutor:
+    """Fault-injection wrapper over the engine's real executor: optional
+    per-dispatch delay (to force queue growth) and injected failures on
+    chosen dispatch indices (to prove failure containment under load)."""
+
+    def __init__(self, inner, *, delay_s: float = 0.0, fail_on=()):
+        self.inner = inner
+        self.delay_s = delay_s
+        self.fail_on = set(fail_on)
+        self.calls = 0
+
+    def execute(self, plan, *operands):
+        call = self.calls
+        self.calls += 1
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        if call in self.fail_on:
+            raise RuntimeError(f"injected dispatch fault (dispatch {call})")
+        return self.inner.execute(plan, *operands)
+
+
+def _warm_compositions(session: TridiagSession, max_batch: int) -> None:
+    """Compile every batch composition the run can produce — ``(REQUEST_SIZE,)*k``
+    for k = 1..max_batch — so the serial worker never pays XLA compile time
+    mid-run (a compile mid-traffic stalls dispatch past request timeouts and
+    the bench would measure the compiler, not the serving layer)."""
+    system = make_diag_dominant_system(REQUEST_SIZE, seed=0)[:4]
+    for k in range(1, max_batch + 1):
+        session.solve_many([system] * k)
+
+
+def _run_load(
+    session: TridiagSession,
+    *,
+    submitters: int,
+    per_thread: int,
+    pace_us: float,
+    timeout_ms: Optional[float],
+    oracle_checks: int = 3,
+    tol: float = 1e-10,
+):
+    """Hammer ``session`` and block until every accepted future resolves.
+
+    Returns counters + wall time. A few solved results are checked against
+    the fp64 Thomas oracle — an off-oracle serving path is a bug, not a
+    data point.
+    """
+    systems = [
+        [
+            make_diag_dominant_system(REQUEST_SIZE, seed=t * per_thread + i)[:4]
+            for i in range(per_thread)
+        ]
+        for t in range(submitters)
+    ]
+    futs, rejected = [], 0
+    lock = threading.Lock()
+    barrier = threading.Barrier(submitters)
+
+    def hammer(tid):
+        nonlocal rejected
+        barrier.wait()
+        for i, sysi in enumerate(systems[tid]):
+            rid = tid * per_thread + i
+            fut = session.try_submit(
+                SolveRequest(rid, *sysi, timeout_ms=timeout_ms)
+            )
+            with lock:
+                if fut is None:
+                    rejected += 1
+                else:
+                    futs.append((rid, fut))
+            if pace_us:
+                time.sleep(pace_us / 1e6)
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(submitters)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    solved = timed_out = failed = 0
+    for rid, fut in futs:
+        err = fut.exception(timeout=60.0)
+        if err is None:
+            solved += 1
+        elif isinstance(err, RequestTimedOutError):
+            timed_out += 1
+        else:
+            failed += 1
+    wall = time.perf_counter() - t0
+
+    unresolved = sum(1 for _, f in futs if not f.done())
+    for rid, fut in futs[:oracle_checks]:
+        if fut.exception(timeout=0) is not None:
+            continue
+        tid, i = divmod(rid, per_thread)
+        dl, d, du, b = systems[tid][i]
+        ref = thomas_numpy(dl, d, du, b)
+        err = float(np.max(np.abs(fut.result(timeout=0) - ref)) / (np.max(np.abs(ref)) + 1e-30))
+        if err > tol:
+            raise RuntimeError(
+                f"served request {rid} off the fp64 oracle: rel err {err:.2e}"
+            )
+    return {
+        "offered": submitters * per_thread,
+        "accepted": len(futs),
+        "rejected": rejected,
+        "solved": solved,
+        "timed_out": timed_out,
+        "failed": failed,
+        "unresolved": unresolved,
+        "wall_s": wall,
+    }
+
+
+def serving_stress(
+    pace_levels_us=(2000.0, 500.0, 100.0, 0.0),
+    *,
+    submitters: int = 4,
+    per_thread: int = 60,
+    max_queue: int = 32,
+    timeout_ms: Optional[float] = 250.0,
+    m: int = 10,
+):
+    """Offered load sweep (pacing interval ↓ = load ↑) on one bounded session.
+
+    Each row uses a FRESH session (so queue high-water and shed counters are
+    per-level) with `max_queue` bounding admission; requests carry a
+    `timeout_ms` queue deadline like real traffic would.
+    """
+    prev_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        header = [
+            "pace_us", "offered", "accepted", "rejected", "timed_out",
+            "failed", "accepted_per_sec", "shed_rate", "queue_high_water",
+            "batches", "mean_batch",
+        ]
+        rows = []
+        for pace_us in pace_levels_us:
+            cfg = SolverConfig(
+                m=m, max_batch=8, max_wait_ms=2.0, max_queue=max_queue
+            )
+            with TridiagSession(cfg) as session:
+                _warm_compositions(session, cfg.max_batch)
+                out = _run_load(
+                    session,
+                    submitters=submitters,
+                    per_thread=per_thread,
+                    pace_us=pace_us,
+                    timeout_ms=timeout_ms,
+                )
+                stats = session.stats
+            if out["unresolved"]:
+                raise RuntimeError(
+                    f"{out['unresolved']} futures left unresolved at "
+                    f"pace_us={pace_us} — the serving contract is broken"
+                )
+            if stats["queue_high_water"] > max_queue:
+                raise RuntimeError(
+                    f"queue high water {stats['queue_high_water']} exceeded "
+                    f"max_queue={max_queue} at pace_us={pace_us}"
+                )
+            batches = stats["batches"]
+            rows.append([
+                pace_us,
+                out["offered"],
+                out["accepted"],
+                out["rejected"],
+                out["timed_out"],
+                out["failed"],
+                round(out["accepted"] / out["wall_s"], 1),
+                round(out["rejected"] / out["offered"], 3),
+                stats["queue_high_water"],
+                batches,
+                round(stats["systems"] / max(batches, 1), 2),
+            ])
+        return header, rows
+    finally:
+        jax.config.update("jax_enable_x64", prev_x64)
+
+
+def smoke() -> None:
+    """CI gate: fault-injected overload run, every hardening invariant hard-
+    asserted. Exits non-zero on the first violation."""
+    prev_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        K = 8
+        cfg = SolverConfig(m=10, max_batch=4, max_wait_ms=2.0, max_queue=K)
+        with TridiagSession(cfg) as session:
+            _warm_compositions(session, cfg.max_batch)
+            # slow every dispatch a little (forces real queue pressure) and
+            # fail two of them mid-run (forces the containment path)
+            session._engine._executor = _FaultyExecutor(
+                session._engine._executor, delay_s=0.002, fail_on={2, 5}
+            )
+            # paced ~2x past capacity so overload is SUSTAINED (a single
+            # burst would fill the queue once and dispatch the faults' batch
+            # indices never)
+            out = _run_load(
+                session,
+                submitters=4,
+                per_thread=100,
+                pace_us=1000.0,
+                timeout_ms=500.0,
+            )
+            stats = session.stats
+            worker_alive = session._worker is not None and session._worker.is_alive()
+        checks = [
+            ("no future left unresolved", out["unresolved"] == 0),
+            ("queue bounded by max_queue", stats["queue_high_water"] <= K),
+            ("overload actually shed work", out["rejected"] > 0),
+            ("rejections signalled (None) and counted",
+             stats["rejected"] == out["rejected"]),
+            ("injected faults failed only their batches", 0 < out["failed"] <= 2 * 4),
+            ("failure counter matches", stats["failed"] == out["failed"]),
+            ("work still solved through the faults", out["solved"] > 0),
+            ("accounting closes: offered = solved+shed+failed+timed_out+rejected",
+             out["offered"] == out["solved"] + out["failed"] + out["timed_out"]
+             + out["rejected"]),
+            ("worker alive at end of run", worker_alive),
+            ("nothing pending after close", session.pending() == 0),
+        ]
+        failed_checks = [name for name, ok in checks if not ok]
+        print(
+            f"offered={out['offered']} solved={out['solved']} "
+            f"rejected={out['rejected']} timed_out={out['timed_out']} "
+            f"failed={out['failed']} queue_high_water="
+            f"{stats['queue_high_water']}/{K} batches={stats['batches']}"
+        )
+        if failed_checks:
+            raise SystemExit(
+                f"serving_stress smoke FAILED: {failed_checks}; run stats: {out}"
+            )
+        print(f"SMOKE OK: {len(checks)} hardening invariants held under "
+              f"fault-injected overload")
+    finally:
+        jax.config.update("jax_enable_x64", prev_x64)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="fault-injected overload run asserting the hardening "
+        "invariants (CI gate)",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    header, rows = serving_stress()
+    print(",".join(str(h) for h in header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

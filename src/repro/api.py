@@ -10,11 +10,16 @@ from repro.core.tridiag.api import (
     BACKEND_NAMES,
     DISPATCH_MODES,
     AdmissionPolicy,
+    QueueFullError,
+    RequestCancelledError,
+    RequestTimedOutError,
+    ServingError,
     SolveEngine,
     SolveFuture,
     SolveRequest,
     SolverConfig,
     TridiagSession,
+    WorkerDiedError,
 )
 from repro.core.tridiag.plan import (
     BACKENDS,
@@ -43,13 +48,18 @@ __all__ = [
     "HeuristicChunkPolicy",
     "PallasBackend",
     "PlanExecutor",
+    "QueueFullError",
     "ReferenceBackend",
+    "RequestCancelledError",
+    "RequestTimedOutError",
+    "ServingError",
     "SolveEngine",
     "SolveFuture",
     "SolveRequest",
     "SolverConfig",
     "StageBackend",
     "TridiagSession",
+    "WorkerDiedError",
     "clear_executable_cache",
     "executable_cache_stats",
     "plan_cache_stats",

@@ -129,11 +129,16 @@ from repro.core.tridiag.ragged import (
 from repro.core.tridiag.api import (
     DISPATCH_MODES,
     AdmissionPolicy,
+    QueueFullError,
+    RequestCancelledError,
+    RequestTimedOutError,
+    ServingError,
     SolveEngine,
     SolveFuture,
     SolveRequest,
     SolverConfig,
     TridiagSession,
+    WorkerDiedError,
 )
 
 __all__ = [
@@ -183,11 +188,16 @@ __all__ = [
     "solve_ragged",
     "split_ragged",
     "AdmissionPolicy",
+    "QueueFullError",
+    "RequestCancelledError",
+    "RequestTimedOutError",
+    "ServingError",
     "SolveEngine",
     "SolveFuture",
     "SolveRequest",
     "SolverConfig",
     "TridiagSession",
+    "WorkerDiedError",
 ]
 
 

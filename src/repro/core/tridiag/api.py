@@ -35,6 +35,29 @@ outstanding future completes, then stops the worker; the worker thread is
 only started by the first ``submit``, so synchronous-only sessions never pay
 for one.
 
+Serving under load (the heavy-traffic contract):
+
+- **No future is ever left unresolved.** Any dispatch failure — in the
+  solve itself or anywhere in its tail (splitting, casting, stats, a result
+  callback) — fails exactly that batch's futures via ``on_error`` and the
+  worker keeps serving; the worker is additionally supervised so that even
+  an unexpected escape fails every outstanding future with
+  :class:`WorkerDiedError` and the next ``submit`` surfaces the death
+  instead of enqueuing into a void.
+- **Backpressure.** ``SolverConfig.max_queue`` bounds the admission queue:
+  ``submit`` raises :class:`QueueFullError` when full, ``try_submit``
+  returns None instead — both immediately, so callers can shed or retry.
+- **Deadlines and cancellation.** A :class:`SolveRequest` may carry
+  ``timeout_ms`` (shed from the queue with :class:`RequestTimedOutError`
+  once expired, before it can poison a batch) and ``priority`` (higher
+  admits first; FIFO within a priority). ``SolveFuture.cancel()`` removes a
+  still-queued request (:class:`RequestCancelledError`); once its batch is
+  taken it runs to completion and ``cancel`` returns False.
+- **Observability.** ``session.stats`` is a consistent lock-held snapshot:
+  dispatch aggregates, queue depth and high-water mark,
+  rejected/timed-out/cancelled/failed counts, and the plan- and
+  executable-cache counters.
+
 The queue/admission/dispatch core is :class:`SolveEngine` — the rebuilt
 ``serve.solve.BatchedSolveService``, which survives there as a thin deprecated
 shim over this engine with its legacy ``submit/poll/flush`` contract.
@@ -55,11 +78,12 @@ Usage::
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -76,6 +100,8 @@ from repro.core.tridiag.plan import (
     Sizes,
     build_plan,
     effective_size,
+    executable_cache_stats,
+    plan_cache_stats,
     price_chunks,
     resolve_backend,
     set_plan_cache_capacity,
@@ -85,24 +111,73 @@ from repro.core.tridiag.ragged import System, fuse_ragged, split_ragged
 __all__ = [
     "AdmissionPolicy",
     "DISPATCH_MODES",
+    "QueueFullError",
+    "RequestCancelledError",
+    "RequestTimedOutError",
+    "ServingError",
     "SolveEngine",
     "SolveFuture",
     "SolveRequest",
     "SolverConfig",
     "TridiagSession",
+    "WorkerDiedError",
 ]
+
+
+# ------------------------------------------------------------- typed errors --
+class ServingError(RuntimeError):
+    """Base of the serving layer's typed failures.
+
+    Every subclass is a *flow-control signal*, not a solver bug: callers
+    under load are expected to catch these and shed, retry, or re-route.
+    """
+
+
+class QueueFullError(ServingError):
+    """``submit`` rejected a request because the admission queue is at
+    ``max_queue``. Raised (or signalled as ``try_submit() is None``)
+    immediately — the caller should shed the request or retry later; nothing
+    was enqueued."""
+
+
+class RequestTimedOutError(ServingError):
+    """A request's ``timeout_ms`` expired while it was still queued; it was
+    shed before admission and its future resolves with this error. Work
+    already admitted into a batch is never interrupted."""
+
+
+class RequestCancelledError(ServingError):
+    """The request was removed from the queue by ``SolveFuture.cancel()``
+    before its batch was taken."""
+
+
+class WorkerDiedError(ServingError):
+    """The session's serving worker terminated abnormally (supervision
+    caught an escape it could not attribute to one batch). Every future
+    outstanding at death resolves with this error, and subsequent ``submit``
+    calls raise it instead of enqueuing into a void — create a new session."""
 
 
 # ------------------------------------------------------------------ request --
 @dataclass
 class SolveRequest:
-    """One tridiagonal system to solve (the serving unit of work)."""
+    """One tridiagonal system to solve (the serving unit of work).
+
+    ``timeout_ms`` (optional) is the request's own queue deadline: if it has
+    not been admitted into a batch within this many milliseconds of submit,
+    it is shed and its future resolves with :class:`RequestTimedOutError`
+    (a batch already taken runs to completion). ``priority`` orders
+    admission: higher priorities are taken first, FIFO within a priority —
+    it never preempts work already in flight.
+    """
 
     rid: int
     dl: np.ndarray
     d: np.ndarray
     du: np.ndarray
     b: np.ndarray
+    timeout_ms: Optional[float] = None
+    priority: int = 0
 
     @property
     def size(self) -> int:
@@ -170,6 +245,12 @@ class SolverConfig:
     ``max_batch`` / ``max_wait_ms`` / ``allow_ragged``
                    admission knobs for :meth:`TridiagSession.submit`
                    (see :class:`AdmissionPolicy`).
+    ``max_queue``  backpressure bound on the admission queue: with this many
+                   requests already waiting, ``submit`` raises
+                   :class:`QueueFullError` and ``try_submit`` returns None —
+                   both immediately, so overload turns into shed load
+                   instead of unbounded memory. None (default) = unbounded
+                   (the pre-hardening behaviour; fine for trusted callers).
     ``plan_cache_capacity``
                    resize the plan LRU at session construction (None leaves
                    it alone; 0 disables plan memoisation). The cache is
@@ -193,6 +274,7 @@ class SolverConfig:
     max_batch: int = 64
     max_wait_ms: float = math.inf
     allow_ragged: bool = True
+    max_queue: Optional[int] = None
     plan_cache_capacity: Optional[int] = None
 
     # -- validation ----------------------------------------------------------
@@ -247,6 +329,11 @@ class SolverConfig:
                 f"max_wait_ms={self.max_wait_ms}: must be >= 0 "
                 f"(math.inf disables the deadline)"
             )
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(
+                f"max_queue={self.max_queue}: must be >= 1 (None disables "
+                f"backpressure — the queue grows without bound)"
+            )
         if self.plan_cache_capacity is not None and self.plan_cache_capacity < 0:
             raise ValueError(
                 f"plan_cache_capacity={self.plan_cache_capacity}: must be "
@@ -277,6 +364,10 @@ class SolveFuture:
     ``result(timeout=)`` blocks until the solution (or re-raises the dispatch
     error); ``done()`` never blocks; ``exception(timeout=)`` blocks like
     ``result`` but returns the error instead of raising it (None on success).
+    ``cancel()`` removes the request from the admission queue if its batch
+    has not been taken yet (the future then resolves with
+    :class:`RequestCancelledError` and ``cancelled()`` is True); once
+    admitted — or already resolved — it returns False and the result stands.
     """
 
     def __init__(self, rid: int):
@@ -284,9 +375,23 @@ class SolveFuture:
         self._event = threading.Event()
         self._value: Optional[np.ndarray] = None
         self._error: Optional[BaseException] = None
+        # Wired by the session at submit: rid -> bool (de-queued or not).
+        self._cancel_hook: Optional[Callable[[int], bool]] = None
 
     def done(self) -> bool:
         return self._event.is_set()
+
+    def cancel(self) -> bool:
+        """Best-effort cancellation: True iff the request was still queued
+        and has now been shed (never raises; never blocks on a solve)."""
+        if self._event.is_set() or self._cancel_hook is None:
+            return False
+        return self._cancel_hook(self.rid)
+
+    def cancelled(self) -> bool:
+        return self._event.is_set() and isinstance(
+            self._error, RequestCancelledError
+        )
 
     def result(self, timeout: Optional[float] = None) -> np.ndarray:
         if not self._event.wait(timeout):
@@ -313,6 +418,13 @@ class SolveFuture:
 class _Pending:
     req: SolveRequest
     t_submit: float
+    seq: int = 0
+    expiry: Optional[float] = None  # absolute clock time; None = no timeout
+
+    @property
+    def sort_key(self) -> Tuple[int, int]:
+        # Admission order: highest priority first, FIFO within a priority.
+        return (-self.req.priority, self.seq)
 
 
 # ------------------------------------------------------------------- engine --
@@ -344,10 +456,28 @@ class SolveEngine:
     ``clock`` (default ``time.perf_counter``) is injectable so deadline tests
     can drive virtual time; batch latency is always real wall time.
 
+    ``max_queue`` bounds the pending queue (:class:`QueueFullError` on
+    submit when full; None = unbounded). Requests carry ``priority``
+    (higher admits first, FIFO within) and ``timeout_ms`` (expired entries
+    are shed before any batch is taken and fail via ``on_error`` with
+    :class:`RequestTimedOutError`; with no ``on_error`` attached — the
+    legacy poll/flush contract — timeouts are inert, since that contract
+    has no error channel).
+
+    Failure containment: with ``on_error`` attached, *nothing* a dispatch
+    does can escape — the solve, the result splitting/casting, stats
+    recording, and each ``on_result`` delivery are all guarded, and any
+    failure resolves exactly the affected requests via ``on_error`` (see
+    :meth:`_dispatch`). Without callbacks, a dispatch error propagates to
+    the caller of ``poll``/``flush`` (the legacy shim's contract).
+
     Stats: ``stats["batches"]/["systems"]/["wall_s"]`` aggregate throughput
     (``systems_per_sec``); ``stats["per_batch"]`` records one dict per
     dispatch with the batch composition, chunk count, solve latency and the
-    requests' queue wait times.
+    requests' queue wait times; ``rejected``/``timed_out``/``cancelled``/
+    ``failed`` count shed and errored requests and ``queue_high_water`` the
+    deepest queue seen. The dict is mutated under ``_stats_lock`` —
+    concurrent readers should take :meth:`stats_snapshot` instead.
     """
 
     def __init__(
@@ -363,15 +493,20 @@ class SolveEngine:
         backend: BackendLike = None,
         dtype=None,
         dispatch: str = "auto",
+        max_queue: Optional[int] = None,
         on_result: Optional[Callable[[int, np.ndarray], None]] = None,
         on_error: Optional[Callable[[int, BaseException], None]] = None,
+        executor=None,
     ):
         if dispatch not in DISPATCH_MODES:
             raise ValueError(
                 f"dispatch={dispatch!r}: must be one of {sorted(DISPATCH_MODES)}"
             )
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue={max_queue}: must be >= 1 (or None)")
         self.admission = admission if admission is not None else AdmissionPolicy()
         self.max_batch = self.admission.max_batch
+        self.max_queue = max_queue
         self.heuristic = heuristic
         self.policy = policy
         self.m = m
@@ -383,22 +518,47 @@ class SolveEngine:
         # Serving dispatches are plain solves (no phase breakdown consumed),
         # so "auto" resolves to the fused single-dispatch path here; the
         # engine always fuses request operands into fresh host arrays, so
-        # buffer donation never consumes a caller's array.
-        self._executor = (
-            PlanExecutor(backend=backend)
-            if dispatch == "staged"
-            else FusedExecutor(backend=backend)
-        )
+        # buffer donation never consumes a caller's array. ``executor=``
+        # overrides the choice — primarily the fault-injection seam for the
+        # serving tests and the stress benchmark.
+        if executor is not None:
+            self._executor = executor
+        else:
+            self._executor = (
+                PlanExecutor(backend=backend)
+                if dispatch == "staged"
+                else FusedExecutor(backend=backend)
+            )
         self._on_result = on_result
         self._on_error = on_error
         self._queue: List[_Pending] = []
+        self._seq = 0
         self._results: Dict[int, np.ndarray] = {}
-        self.stats = {"batches": 0, "systems": 0, "wall_s": 0.0, "per_batch": []}
+        # The queue is serialised by the owner (session lock / single-threaded
+        # shim), but stats are ALSO written by _dispatch, which the session
+        # runs outside its lock so submits keep flowing during a solve —
+        # hence their own lock, shared with stats_snapshot().
+        self._stats_lock = threading.Lock()
+        self.stats = {
+            "batches": 0,
+            "systems": 0,
+            "wall_s": 0.0,
+            "per_batch": [],
+            "rejected": 0,
+            "timed_out": 0,
+            "cancelled": 0,
+            "failed": 0,
+            "queue_high_water": 0,
+        }
 
     # -- scheduling ----------------------------------------------------------
     def submit(self, req: SolveRequest) -> None:
         """Validate and enqueue a request; with ``eager=True``, admission
-        triggers (a full batch) dispatch inside this call."""
+        triggers (a full batch) dispatch inside this call.
+
+        Raises :class:`QueueFullError` when ``max_queue`` requests are
+        already waiting (backpressure — nothing is enqueued, the caller
+        decides whether to retry or shed)."""
         d = np.asarray(req.d)
         if d.ndim != 1:
             raise ValueError(
@@ -420,17 +580,89 @@ class SolveEngine:
             raise ValueError(
                 f"request {req.rid}: size {req.size} not divisible by m={self.m}"
             )
-        if self.dtype is not None:
-            req = SolveRequest(
-                req.rid,
-                *(np.asarray(a, dtype=self.dtype) for a in (req.dl, req.d, req.du, req.b)),
+        if req.timeout_ms is not None and req.timeout_ms < 0:
+            raise ValueError(
+                f"request {req.rid}: timeout_ms={req.timeout_ms} must be "
+                f">= 0 (or None for no queue deadline)"
             )
-        self._queue.append(_Pending(req, self._clock()))
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            with self._stats_lock:
+                self.stats["rejected"] += 1
+            raise QueueFullError(
+                f"request {req.rid} rejected: admission queue is full "
+                f"({len(self._queue)}/{self.max_queue} waiting); retry later "
+                f"or shed (try_submit returns None instead of raising)"
+            )
+        if self.dtype is not None:
+            req = dataclasses.replace(
+                req,
+                **{
+                    name: np.asarray(getattr(req, name), dtype=self.dtype)
+                    for name in ("dl", "d", "du", "b")
+                },
+            )
+        now = self._clock()
+        self._seq += 1
+        pending = _Pending(
+            req,
+            now,
+            seq=self._seq,
+            expiry=None if req.timeout_ms is None else now + req.timeout_ms / 1e3,
+        )
+        # Priority insertion keeps the queue sorted by (-priority, seq), so
+        # _take_group's prefix IS the admission order.
+        bisect.insort(self._queue, pending, key=lambda p: p.sort_key)
+        with self._stats_lock:
+            self.stats["queue_high_water"] = max(
+                self.stats["queue_high_water"], len(self._queue)
+            )
         if self._eager:
             self._admit(self._clock())
 
     def pending(self) -> int:
         return len(self._queue)
+
+    def cancel(self, rid: int) -> Optional[SolveRequest]:
+        """Remove a still-queued request; returns it, or None if no request
+        with ``rid`` is waiting (already admitted, resolved, or unknown).
+        The caller owns resolving the request's future/consumer."""
+        for i, p in enumerate(self._queue):
+            if p.req.rid == rid:
+                del self._queue[i]
+                with self._stats_lock:
+                    self.stats["cancelled"] += 1
+                return p.req
+        return None
+
+    def shed_expired(self, now: Optional[float] = None) -> int:
+        """Drop every queued request whose ``timeout_ms`` has expired,
+        failing each via ``on_error`` with :class:`RequestTimedOutError`;
+        returns how many were shed. Runs automatically before any batch is
+        taken, so an expired request never rides (or delays) a dispatch.
+        No-op without an ``on_error`` channel (legacy poll/flush contract).
+        """
+        if self._on_error is None or not self._queue:
+            return 0
+        now = self._clock() if now is None else now
+        live = [p for p in self._queue if p.expiry is None or now < p.expiry]
+        shed = len(self._queue) - len(live)
+        if not shed:
+            return 0
+        expired = [p for p in self._queue if not (p.expiry is None or now < p.expiry)]
+        self._queue = live
+        with self._stats_lock:
+            self.stats["timed_out"] += shed
+        for p in expired:
+            err = RequestTimedOutError(
+                f"request {p.req.rid} spent more than its timeout_ms="
+                f"{p.req.timeout_ms} in the admission queue and was shed "
+                f"before dispatch"
+            )
+            try:
+                self._on_error(p.req.rid, err)
+            except Exception:
+                pass  # an error channel that raises must not kill serving
+        return shed
 
     def pick_chunks(self, size: int, batch: int) -> int:
         """Chunk count for a same-size (size × batch) dispatch."""
@@ -449,31 +681,55 @@ class SolveEngine:
         return price_chunks(self.heuristic, tuple(sizes))
 
     # -- admission -----------------------------------------------------------
+    def _oldest_submit(self) -> float:
+        # Priority ordering means queue[0] is the *highest-priority* entry,
+        # not the oldest — the admission deadline belongs to the oldest.
+        return min(p.t_submit for p in self._queue)
+
     def seconds_to_deadline(self, now: Optional[float] = None) -> Optional[float]:
         """Seconds until the oldest pending request's deadline expires.
 
         None when the queue is empty or no deadline is configured; 0.0 when
-        it has already expired. This is exactly how long the session's worker
-        thread may sleep before the next poll must run.
+        it has already expired.
         """
         if not self._queue or math.isinf(self.admission.max_wait_ms):
             return None
         now = self._clock() if now is None else now
-        deadline = self._queue[0].t_submit + self.admission.max_wait_ms / 1e3
+        deadline = self._oldest_submit() + self.admission.max_wait_ms / 1e3
         return max(0.0, deadline - now)
+
+    def seconds_to_next_event(self, now: Optional[float] = None) -> Optional[float]:
+        """Seconds until the next trigger the worker must service: the
+        admission deadline (``max_wait_ms``) or the earliest per-request
+        ``timeout_ms`` expiry, whichever comes first. None when neither is
+        pending — the worker may then sleep until a submit notification.
+        This is exactly how long the session's worker thread may sleep
+        before the next poll must run."""
+        if not self._queue:
+            return None
+        now = self._clock() if now is None else now
+        ticks: List[float] = []
+        if not math.isinf(self.admission.max_wait_ms):
+            ticks.append(self._oldest_submit() + self.admission.max_wait_ms / 1e3)
+        ticks.extend(p.expiry for p in self._queue if p.expiry is not None)
+        if not ticks:
+            return None
+        return max(0.0, min(ticks) - now)
 
     def _deadline_expired(self, now: float) -> bool:
         return (
             bool(self._queue)
-            and (now - self._queue[0].t_submit) * 1e3 >= self.admission.max_wait_ms
+            and (now - self._oldest_submit()) * 1e3 >= self.admission.max_wait_ms
         )
 
     def take_due_group(self, now: float) -> Optional[List[_Pending]]:
         """Pop the next admissible batch (max_batch reached or deadline
-        expired), or None. This is the session worker's lock-held step —
-        cheap queue surgery only; the dispatch itself runs outside the lock
-        so submits keep flowing (and getting exact timestamps) while a batch
-        is in flight."""
+        expired), or None. Expired-timeout requests are shed first, so they
+        neither ride a batch nor hold the deadline open. This is the session
+        worker's lock-held step — cheap queue surgery only; the dispatch
+        itself runs outside the lock so submits keep flowing (and getting
+        exact timestamps) while a batch is in flight."""
+        self.shed_expired(now)
         if self._queue and (
             len(self._queue) >= self.admission.max_batch
             or self._deadline_expired(now)
@@ -514,6 +770,7 @@ class SolveEngine:
     def flush(self) -> Dict[int, np.ndarray]:
         """Dispatch everything pending; returns every undrained {rid: solution}."""
         now = self._clock()
+        self.shed_expired(now)
         while self._queue:
             self._dispatch(self._take_group(), now)
         return self._drain()
@@ -523,12 +780,37 @@ class SolveEngine:
         out, self._results = self._results, {}
         return out
 
+    def _fail_group(self, reqs: Sequence[SolveRequest], e: BaseException) -> None:
+        """Fail every request in ``reqs`` via ``on_error`` (each delivery
+        guarded — a raising error channel must not take the others down);
+        re-raise when there is no error channel (legacy poll/flush)."""
+        with self._stats_lock:
+            self.stats["failed"] += len(reqs)
+        if self._on_error is None:
+            raise e
+        for r in reqs:
+            try:
+                self._on_error(r.rid, e)
+            except Exception:
+                pass
+
     def _dispatch(self, group: List[_Pending], now: float) -> None:
+        """Solve one admitted batch and deliver its results.
+
+        EVERYTHING in here is guarded: the solve, the tail (the
+        ``split_ragged`` views, the per-solution cast, stats recording) and
+        each per-request delivery. A failure anywhere fails exactly the
+        affected requests via ``on_error`` and returns normally — this
+        method must never raise into the session's worker loop, because a
+        dead worker would hang every pending and future submit (the original
+        serving bug: only the solve was guarded, so a post-execute error
+        silently killed the daemon thread).
+        """
         reqs = [p.req for p in group]
-        sizes = tuple(r.size for r in reqs)
-        same_size = len(set(sizes)) == 1
         t0 = time.perf_counter()
         try:
+            sizes = tuple(r.size for r in reqs)
+            same_size = len(set(sizes)) == 1
             dl, d, du, b, sizes = fuse_ragged([(r.dl, r.d, r.du, r.b) for r in reqs])
             if self.policy is not None:
                 plan = build_plan(sizes, self.m, policy=self.policy)
@@ -537,45 +819,60 @@ class SolveEngine:
                     sizes, self.m, num_chunks=self.pick_chunks_ragged(sizes)
                 )
             x, _ = self._executor.execute(plan, dl, d, du, b)
+            # copy: split_ragged returns views, which would otherwise pin the
+            # whole fused solution for as long as any one result is retained
+            solutions = [
+                np.array(xi, dtype=self.dtype, copy=True)
+                for xi in split_ragged(x, sizes)
+            ]
+            dt = time.perf_counter() - t0
+            waits_ms = [(now - p.t_submit) * 1e3 for p in group]
+            # Stats are recorded BEFORE futures resolve: a caller unblocked
+            # by fut.result() may immediately read session.stats and must see
+            # this batch's entry (the worker races it otherwise).
+            with self._stats_lock:
+                self.stats["batches"] += 1
+                self.stats["systems"] += len(reqs)
+                self.stats["wall_s"] += dt
+                self.stats["per_batch"].append(
+                    {
+                        "systems": len(reqs),
+                        "sizes": sizes,
+                        "effective_size": effective_size(sizes),
+                        "ragged": not same_size,
+                        "num_chunks": plan.num_chunks,
+                        "latency_ms": dt * 1e3,
+                        "mean_wait_ms": float(np.mean(waits_ms)),
+                        "max_wait_ms": float(np.max(waits_ms)),
+                    }
+                )
         except Exception as e:
-            # With futures attached, a bad dispatch must fail *those* requests
-            # and leave the engine serving; the legacy shim keeps the raise.
-            if self._on_error is not None:
-                for r in reqs:
-                    self._on_error(r.rid, e)
-                return
-            raise
-        # copy: split_ragged returns views, which would otherwise pin the
-        # whole fused solution for as long as any one result is retained
-        solutions = [
-            np.array(xi, dtype=self.dtype, copy=True)
-            for xi in split_ragged(x, sizes)
-        ]
-        dt = time.perf_counter() - t0
-        waits_ms = [(now - p.t_submit) * 1e3 for p in group]
-        # Stats are recorded BEFORE futures resolve: a caller unblocked by
-        # fut.result() may immediately read session.stats and must see this
-        # batch's entry (the worker races it otherwise).
-        self.stats["batches"] += 1
-        self.stats["systems"] += len(reqs)
-        self.stats["wall_s"] += dt
-        self.stats["per_batch"].append(
-            {
-                "systems": len(reqs),
-                "sizes": sizes,
-                "effective_size": effective_size(sizes),
-                "ragged": not same_size,
-                "num_chunks": plan.num_chunks,
-                "latency_ms": dt * 1e3,
-                "mean_wait_ms": float(np.mean(waits_ms)),
-                "max_wait_ms": float(np.max(waits_ms)),
-            }
-        )
+            # A bad dispatch fails *these* requests and leaves the engine
+            # serving; the legacy shim (no on_error) keeps the raise.
+            self._fail_group(reqs, e)
+            return
         for r, xi in zip(reqs, solutions):
             if self._on_result is not None:
-                self._on_result(r.rid, xi)
+                try:
+                    self._on_result(r.rid, xi)
+                except Exception as e:
+                    # A result channel that raises fails only ITS request;
+                    # the rest of the batch still delivers.
+                    self._fail_group([r], e)
             else:
                 self._results[r.rid] = xi
+
+    def stats_snapshot(self) -> dict:
+        """A consistent copy of :attr:`stats` (``per_batch`` entries
+        included) plus the instantaneous ``queue_depth``, safe to read while
+        a dispatch records its batch on another thread."""
+        with self._stats_lock:
+            snap = {
+                k: (v if not isinstance(v, list) else [dict(pb) for pb in v])
+                for k, v in self.stats.items()
+            }
+        snap["queue_depth"] = len(self._queue)
+        return snap
 
     @property
     def systems_per_sec(self) -> float:
@@ -613,6 +910,7 @@ class TridiagSession:
         self._futures: Dict[int, SolveFuture] = {}
         self._worker: Optional[threading.Thread] = None
         self._closed = False
+        self._worker_error: Optional[BaseException] = None
         self._engine = SolveEngine(
             m=self.config.m,
             policy=self.config.policy,
@@ -622,6 +920,7 @@ class TridiagSession:
             backend=self.backend,
             dtype=self.config.dtype,
             dispatch=self.config.dispatch,
+            max_queue=self.config.max_queue,
             on_result=lambda rid, x: self._resolve_future(rid, value=x),
             on_error=lambda rid, e: self._resolve_future(rid, error=e),
         )
@@ -723,7 +1022,22 @@ class TridiagSession:
     def submit(self, req: SolveRequest) -> SolveFuture:
         """Enqueue a request; the returned future resolves when its batch
         dispatches (at ``max_batch`` occupancy or the ``max_wait_ms``
-        deadline — whichever the worker hits first)."""
+        deadline — whichever the worker hits first).
+
+        Raises :class:`QueueFullError` when ``SolverConfig.max_queue``
+        requests are already waiting (see :meth:`try_submit` for the
+        non-raising variant) and :class:`WorkerDiedError` if the serving
+        worker has terminated abnormally."""
+        return self._submit(req, raise_on_full=True)
+
+    def try_submit(self, req: SolveRequest) -> Optional[SolveFuture]:
+        """Like :meth:`submit`, but backpressure-friendly: returns None
+        (immediately, nothing enqueued) instead of raising
+        :class:`QueueFullError` when the admission queue is full. Every
+        other submit failure still raises."""
+        return self._submit(req, raise_on_full=False)
+
+    def _submit(self, req: SolveRequest, *, raise_on_full: bool) -> Optional[SolveFuture]:
         fut = SolveFuture(req.rid)
         with self._cv:
             if self._closed:
@@ -731,6 +1045,17 @@ class TridiagSession:
                     "session is closed; create a new TridiagSession (close() "
                     "drains the queue, it cannot be reopened)"
                 )
+            # A silently-dead worker is the difference between "slow" and
+            # "hangs forever": every enqueued request would wait on a thread
+            # that no longer exists. Surface the death instead.
+            if self._worker_error is not None or (
+                self._worker is not None and not self._worker.is_alive()
+            ):
+                raise WorkerDiedError(
+                    f"the serving worker of this session died "
+                    f"({self._worker_error!r}); its futures were failed — "
+                    f"create a new TridiagSession"
+                ) from self._worker_error
             if req.rid in self._futures:
                 raise ValueError(
                     f"request id {req.rid} is already in flight in this "
@@ -739,9 +1064,15 @@ class TridiagSession:
             self._futures[req.rid] = fut
             try:
                 self._engine.submit(req)
+            except QueueFullError:
+                del self._futures[req.rid]
+                if raise_on_full:
+                    raise
+                return None
             except Exception:
                 del self._futures[req.rid]
                 raise
+            fut._cancel_hook = self._cancel
             if self._worker is None:
                 self._worker = threading.Thread(
                     target=self._serve_loop,
@@ -752,6 +1083,21 @@ class TridiagSession:
             self._cv.notify_all()
         return fut
 
+    def _cancel(self, rid: int) -> bool:
+        """``SolveFuture.cancel`` hook: shed a still-queued request."""
+        with self._cv:
+            req = self._engine.cancel(rid)
+            if req is None:
+                return False  # already admitted (in flight) or resolved
+        self._resolve_future(
+            rid,
+            error=RequestCancelledError(
+                f"request {rid} was cancelled while queued (its batch had "
+                f"not been taken)"
+            ),
+        )
+        return True
+
     def _resolve_future(self, rid: int, value=None, error=None) -> None:
         fut = self._futures.pop(rid, None)
         if fut is not None:
@@ -761,40 +1107,89 @@ class TridiagSession:
         """Worker: dispatch due batches, sleep exactly until the next trigger.
 
         Wake-ups: a submit notification (max_batch may now hold), the oldest
-        request's deadline (timed wait), or close(). No caller ever polls.
-        The lock is held only for queue surgery — each solve runs OUTSIDE it,
-        so submits keep enqueuing (with exact deadline timestamps) while a
-        batch is in flight.
+        request's admission deadline or the earliest per-request timeout
+        (timed wait), or close(). No caller ever polls. The lock is held
+        only for queue surgery — each solve runs OUTSIDE it, so submits keep
+        enqueuing (with exact deadline timestamps) while a batch is in
+        flight.
+
+        Supervision: :meth:`SolveEngine._dispatch` already guards everything
+        it does, so per-batch failures resolve that batch's futures and the
+        loop keeps serving. The belt-and-braces layers here exist for what
+        cannot be attributed to one batch: an in-flight escape still fails
+        that group's futures, and an escape from the lock-held queue surgery
+        itself (or a non-``Exception`` like ``MemoryError``) fails EVERY
+        outstanding future with :class:`WorkerDiedError` before the thread
+        exits — no submitted request is ever left unresolved, and the next
+        ``submit`` raises instead of enqueuing into a void.
         """
-        while True:
+        try:
+            while True:
+                with self._cv:
+                    now = self._engine._clock()
+                    group = self._engine.take_due_group(now)
+                    if group is None:
+                        if self._closed:
+                            self._engine.shed_expired(now)
+                            if self._engine.pending() == 0:
+                                return
+                            group = self._engine._take_group()  # drain mode
+                        elif self._engine.pending() == 0:
+                            self._cv.wait()
+                            continue
+                        else:
+                            self._cv.wait(
+                                timeout=self._engine.seconds_to_next_event(now)
+                            )
+                            continue
+                try:
+                    self._engine._dispatch(group, now)  # futures resolve in here
+                except BaseException as e:
+                    for p in group:
+                        self._resolve_future(p.req.rid, error=e)
+                    if not isinstance(e, Exception):
+                        raise  # fatal (MemoryError & co) → outer supervisor
+        except BaseException as e:
             with self._cv:
-                now = self._engine._clock()
-                group = self._engine.take_due_group(now)
-                if group is None:
-                    if self._closed:
-                        if self._engine.pending() == 0:
-                            return
-                        group = self._engine._take_group()  # drain mode
-                    elif self._engine.pending() == 0:
-                        self._cv.wait()
-                        continue
-                    else:
-                        self._cv.wait(
-                            timeout=self._engine.seconds_to_deadline(now)
-                        )
-                        continue
-            self._engine._dispatch(group, now)  # futures resolve in here
+                self._worker_error = e
+                died = WorkerDiedError(
+                    f"serving worker died: {e!r}; this session can no longer "
+                    f"serve submits"
+                )
+                died.__cause__ = e
+                self._engine._queue.clear()  # their futures fail right here
+                for rid in list(self._futures):
+                    self._resolve_future(rid, error=died)
+                self._cv.notify_all()
 
     # -- lifecycle -----------------------------------------------------------
     def pending(self) -> int:
-        """Requests waiting for admission (futures not yet resolved)."""
+        """Unresolved requests: still queued for admission OR taken into an
+        in-flight batch whose futures have not resolved yet. (Counted from
+        the futures table — the engine's queue length alone would miss an
+        in-flight batch.)"""
         with self._cv:
-            return self._engine.pending()
+            return len(self._futures)
 
     @property
     def stats(self) -> dict:
-        """The serving engine's dispatch stats (see :class:`SolveEngine`)."""
-        return self._engine.stats
+        """A consistent snapshot of the serving state, taken under the
+        session lock — never the live dict the worker mutates.
+
+        Keys: the :class:`SolveEngine` dispatch aggregates (``batches``,
+        ``systems``, ``wall_s``, ``per_batch``), the load-shedding counters
+        (``rejected``, ``timed_out``, ``cancelled``, ``failed``), queue
+        occupancy (``queue_depth``, ``queue_high_water``, ``unresolved`` =
+        :meth:`pending`), and the process-wide ``plan_cache`` /
+        ``executable_cache`` hit/miss counters from
+        :mod:`repro.core.tridiag.plan`.
+        """
+        with self._cv:
+            snap = self._engine.stats_snapshot()
+            snap["unresolved"] = len(self._futures)
+        snap["plan_cache"] = plan_cache_stats()
+        snap["executable_cache"] = executable_cache_stats()
+        return snap
 
     def close(self) -> None:
         """Drain the queue (outstanding futures complete), stop the worker.

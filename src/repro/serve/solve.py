@@ -64,6 +64,13 @@ class BatchedSolveService(SolveEngine):
     bit-exact pre-fused numerics; pass ``dispatch="auto"``/``"fused"`` to
     opt in to the single-dispatch fused path (or migrate to
     ``TridiagSession``, whose default already serves fused).
+
+    ``max_queue`` rides along too (``submit`` raises
+    :class:`~repro.api.QueueFullError` at the bound). Note the rest of the
+    serving-hardening layer — per-request ``timeout_ms``, ``cancel()``,
+    ``try_submit`` — needs the session's future-based error channel; this
+    shim's poll/flush dict has nowhere to surface a shed request, which is
+    one more reason to migrate.
     """
 
     def __init__(
@@ -77,6 +84,7 @@ class BatchedSolveService(SolveEngine):
         clock: Callable[[], float] = time.perf_counter,
         backend=None,
         dispatch: str = "staged",
+        max_queue: Optional[int] = None,
     ):
         warnings.warn(
             "BatchedSolveService is deprecated: build a repro.api.SolverConfig "
@@ -105,4 +113,5 @@ class BatchedSolveService(SolveEngine):
             clock=clock,
             backend=backend,
             dispatch=dispatch,
+            max_queue=max_queue,
         )
