@@ -1,0 +1,77 @@
+"""Shared (B × n) batched-throughput sweep loop.
+
+`batched_throughput` and `backend_throughput` time the same thing — a
+`TridiagSession.solve_batched` call over a (size × batch × num_chunks) grid —
+and differ only in which config axes they vary (chunk policy vs backend ×
+operand layout) and which derived columns they append. This module owns the
+one timing/oracle loop so the two benches cannot drift apart.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.tridiag.api import TridiagSession
+from repro.core.tridiag.reference import make_diag_dominant_system, thomas_numpy
+
+
+def sweep_batched_grid(
+    variants,
+    sizes,
+    batches,
+    chunk_counts,
+    *,
+    reps: int = 3,
+    tol: float | None = None,
+    extra=None,
+):
+    """Time ``solve_batched`` over every (size × batch × variant × chunks) cell.
+
+    ``variants`` is a sequence of ``(label_cols, config)`` pairs: the label
+    columns (e.g. ``(backend, layout)``) lead each row, followed by
+    ``size, batch, num_chunks, ms_per_batch, systems_per_sec``, then — when
+    ``tol`` is set — ``max_rel_err`` checked against the per-system fp64
+    ``thomas_numpy`` oracle (an off-oracle cell raises: that is a bug, not a
+    data point), then any columns produced by ``extra(n, batch)``. Each cell
+    warms the jit/executable caches untimed and reports best-of-``reps``.
+    """
+    rows = []
+    for n in sizes:
+        for batch in batches:
+            dl, d, du, b, _ = make_diag_dominant_system(n, seed=0, batch=(batch,))
+            refs = (
+                np.stack([thomas_numpy(*(a[i] for a in (dl, d, du, b)))
+                          for i in range(batch)])
+                if tol is not None
+                else None
+            )
+            trail = tuple(extra(n, batch)) if extra is not None else ()
+            for label, cfg in variants:
+                for k in chunk_counts:
+                    session = TridiagSession(cfg.replace(num_chunks=k))
+                    x = session.solve_batched(dl, d, du, b)  # warmup + probe
+                    err_cols = ()
+                    if refs is not None:
+                        err = float(
+                            np.max(np.abs(np.asarray(x) - refs))
+                            / (np.max(np.abs(refs)) + 1e-30)
+                        )
+                        if err > tol:
+                            raise RuntimeError(
+                                f"cell {tuple(label)} off fp64 oracle: "
+                                f"n={n} B={batch} k={k} err={err:.2e}"
+                            )
+                        err_cols = (f"{err:.2e}",)
+                    best = np.inf
+                    for _ in range(reps):
+                        t0 = time.perf_counter()
+                        session.solve_batched(dl, d, du, b)
+                        best = min(best, time.perf_counter() - t0)
+                    rows.append([
+                        *label, n, batch, k,
+                        round(best * 1e3, 3), round(batch / best, 1),
+                        *err_cols, *trail,
+                    ])
+    return rows

@@ -1,16 +1,20 @@
-"""Stage-backend throughput: reference jnp stages vs Pallas kernels per plan.
+"""Stage-backend × operand-layout throughput over a (B × n) batch grid.
 
 The paper's throughput lives in the stage-1/stage-3 device kernels; this
-sweep makes the backend axis of the plan executor
-(`repro.core.tridiag.plan.StageBackend`) measurable: every
-(backend × size × num_chunks) cell runs the same `SolvePlan` through a
-`TridiagSession` configured for that backend and reports best-of-reps
-latency and solves/sec, fp64-oracle-checked against per-system Thomas. The
-registry's ``"auto"`` entry rides along (resolving to the reference stages
-off-TPU, the Pallas kernels on a TPU host). On this CPU container the Pallas
-backend runs in interpret mode — the numbers demonstrate the wiring and
-parity, not kernel speed; on a TPU host the identical sweep compares the
-Mosaic-compiled kernels against the jnp stages.
+sweep makes both kernel axes of the plan executor measurable: the stage
+*backend* (`repro.core.tridiag.plan.StageBackend` — reference jnp stages vs
+Pallas kernels) and the operand *layout* (`SolverConfig.layout` —
+system-major fused operands vs the batch-interleaved lane-major wide form).
+Every (backend × layout × size × batch × num_chunks) cell runs the same
+batch through a `TridiagSession` via the shared ``_sweep`` loop and reports
+best-of-reps latency and systems/sec, fp64-oracle-checked against per-system
+Thomas. The interleaved layout should pull ahead of system-major as B grows
+past a lane-quarter (B ≥ 32): stage tiles put systems on the vector lanes
+and the Stage-2 reduced solve becomes B parallel scans instead of one serial
+``Σ Pᵢ`` scan. On this CPU container the Pallas backend runs in interpret
+mode — its numbers demonstrate wiring and parity, not kernel speed; the
+reference-backend layout ratio is the meaningful one here, and on a TPU host
+the identical sweep compares the Mosaic-compiled kernels.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run --only backend_throughput
@@ -19,72 +23,52 @@ Usage:
 
 from __future__ import annotations
 
-import time
-
 import jax
-import numpy as np
 
-from repro.core.tridiag.api import SolverConfig, TridiagSession
+from benchmarks._sweep import sweep_batched_grid
+from repro.core.tridiag.api import SolverConfig
 from repro.core.tridiag.plan import BACKENDS
-from repro.core.tridiag.reference import make_diag_dominant_system, thomas_numpy
+
+LAYOUTS = ("system-major", "interleaved")
+
+HEADER = [
+    "backend", "layout", "size", "batch", "num_chunks", "ms_per_batch",
+    "systems_per_sec", "max_rel_err",
+]
 
 
 def backend_throughput(
-    sizes=(2_000, 20_000, 100_000),
-    chunk_counts=(1, 2, 4, 8),
+    sizes=(320, 2_560),
+    batches=(1, 8, 32, 64),
+    chunk_counts=(1, 4),
     backends=tuple(BACKENDS),
+    layouts=LAYOUTS,
     *,
     m: int = 10,
     reps: int = 3,
     tol: float = 1e-10,
 ):
-    """best-of-reps latency + solves/sec per (backend, size, num_chunks) cell.
+    """best-of-reps latency + systems/sec per (backend × layout × B × n) cell.
 
     Every cell's solution is checked against the fp64 ``thomas_numpy`` oracle
-    before it is timed; an off-oracle backend is a bug, not a data point.
+    before it is timed; an off-oracle cell is a bug, not a data point.
     """
     # The paper's precision is FP64; scope the x64 flag to this bench so the
     # LM benches in the same driver run keep default f32/bf16 promotion.
     prev_x64 = jax.config.jax_enable_x64
     jax.config.update("jax_enable_x64", True)
     try:
-        return _backend_throughput(
-            sizes, chunk_counts, backends, m=m, reps=reps, tol=tol
+        variants = [
+            ((backend, layout), SolverConfig(m=m, backend=backend, layout=layout))
+            for backend in backends
+            for layout in layouts
+        ]
+        rows = sweep_batched_grid(
+            variants, sizes, batches, chunk_counts, reps=reps, tol=tol
         )
+        return HEADER, rows
     finally:
         jax.config.update("jax_enable_x64", prev_x64)
-
-
-def _backend_throughput(sizes, chunk_counts, backends, *, m, reps, tol):
-    header = [
-        "backend", "size", "num_chunks", "ms_per_solve", "solves_per_sec",
-        "max_rel_err",
-    ]
-    rows = []
-    for n in sizes:
-        dl, d, du, b, _ = make_diag_dominant_system(n, seed=0)
-        ref = thomas_numpy(dl, d, du, b)
-        for backend in backends:
-            cfg = SolverConfig(m=m, backend=backend)
-            for k in chunk_counts:
-                session = TridiagSession(cfg.replace(num_chunks=k))
-                x = session.solve(dl, d, du, b)  # untimed warmup + oracle probe
-                err = float(np.max(np.abs(x - ref)) / (np.max(np.abs(ref)) + 1e-30))
-                if err > tol:
-                    raise RuntimeError(
-                        f"backend {backend!r} off fp64 oracle: "
-                        f"n={n} k={k} err={err:.2e}"
-                    )
-                best = np.inf
-                for _ in range(reps):
-                    t0 = time.perf_counter()
-                    session.solve(dl, d, du, b)
-                    best = min(best, time.perf_counter() - t0)
-                rows.append([
-                    backend, n, k, round(best * 1e3, 3), round(1.0 / best, 1),
-                    f"{err:.2e}",
-                ])
-    return header, rows
 
 
 def main() -> None:
@@ -94,13 +78,14 @@ def main() -> None:
     ap.add_argument(
         "--smoke",
         action="store_true",
-        help="tiny sweep (CI gate): every backend must pass the fp64 oracle",
+        help="tiny sweep (CI gate): every (backend × layout) cell must pass "
+        "the fp64 oracle at B in {1, 8, 64}, interleaved included",
     )
     args = ap.parse_args()
 
     if args.smoke:
         header, rows = backend_throughput(
-            sizes=(600,), chunk_counts=(1, 3), reps=1
+            sizes=(320,), batches=(1, 8, 64), chunk_counts=(1,), reps=1
         )
     else:
         header, rows = backend_throughput()
@@ -108,11 +93,20 @@ def main() -> None:
     for r in rows:
         print(",".join(str(x) for x in r))
     if args.smoke:
-        covered = {r[0] for r in rows}
-        missing = set(BACKENDS) - covered
+        covered = {(r[0], r[1]) for r in rows}
+        want = {(bk, ly) for bk in BACKENDS for ly in LAYOUTS}
+        missing = want - covered
         if missing:
-            raise SystemExit(f"smoke sweep missed backends: {sorted(missing)}")
-        print(f"SMOKE OK: {len(rows)} cells across backends {sorted(covered)}")
+            raise SystemExit(f"smoke sweep missed cells: {sorted(missing)}")
+        wide_batches = {r[3] for r in rows if r[1] == "interleaved"}
+        if not {1, 8, 64} <= wide_batches:
+            raise SystemExit(
+                f"interleaved smoke cells missing batches: got {sorted(wide_batches)}"
+            )
+        print(
+            f"SMOKE OK: {len(rows)} oracle-checked cells across "
+            f"{len(covered)} backend×layout combos, interleaved at B=1/8/64"
+        )
 
 
 if __name__ == "__main__":

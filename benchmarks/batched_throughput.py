@@ -12,14 +12,10 @@ Usage:
 
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
+from benchmarks._sweep import sweep_batched_grid
 from repro.core.autotune.heuristic import fit_batched_stream_heuristic
 from repro.core.streams.simulator import StreamSimulator
-from repro.core.tridiag.api import SolverConfig, TridiagSession
-from repro.core.tridiag.reference import make_diag_dominant_system
+from repro.core.tridiag.api import SolverConfig
 
 
 def batched_throughput(
@@ -34,7 +30,8 @@ def batched_throughput(
 
     The heuristic column is fitted on the calibrated simulator's batched
     campaign (this container has no GPU); on real hardware swap in
-    ``measure_batched_dataset`` for an apples-to-apples tune.
+    ``measure_batched_dataset`` for an apples-to-apples tune. The timing loop
+    itself is the shared ``_sweep`` grid (same loop as backend_throughput).
     """
     sim = StreamSimulator(seed=1)
     heur = fit_batched_stream_heuristic(
@@ -42,22 +39,10 @@ def batched_throughput(
     )
     header = ["size", "batch", "num_chunks", "ms_per_batch", "systems_per_sec",
               "heuristic_pick"]
-    rows = []
-    cfg = SolverConfig(m=m, backend="reference")
-    for n in sizes:
-        for batch in batches:
-            dl, d, du, b, _ = make_diag_dominant_system(n, seed=0, batch=(batch,))
-            pick = heur.predict_optimum(n, batch)
-            for k in chunk_counts:
-                session = TridiagSession(cfg.replace(num_chunks=k))
-                session.solve_batched(dl, d, du, b)  # warm the jit caches
-                best = np.inf
-                for _ in range(reps):
-                    t0 = time.perf_counter()
-                    session.solve_batched(dl, d, du, b)
-                    best = min(best, time.perf_counter() - t0)
-                rows.append([
-                    n, batch, k, round(best * 1e3, 3),
-                    round(batch / best, 1), pick,
-                ])
+    rows = sweep_batched_grid(
+        [((), SolverConfig(m=m, backend="reference"))],
+        sizes, batches, chunk_counts,
+        reps=reps,
+        extra=lambda n, batch: (heur.predict_optimum(n, batch),),
+    )
     return header, rows

@@ -63,15 +63,34 @@ Plan/execute architecture
 -------------------------
 `plan.py` is the single execution path: an immutable ``SolvePlan`` (fused
 block layout, chunk bounds, halo map, per-system offsets; chunk count from a
-pluggable ``ChunkPolicy``) executed by a ``PlanExecutor`` whose stage
-callables are cached module-wide per ``(m, backend)`` — the stage
-implementation is itself pluggable (``ReferenceBackend`` jnp stages,
-``PallasBackend`` kernels, ``"auto"`` resolving per host), and plans are
-memoised by their ``(sizes, m, num_chunks)`` signature (both caches
-lock-protected: sessions solve from two threads). `ragged.py` fuses
-*mixed-size* systems into one block axis (exact decoupling via zeroed
-boundary couplings), so one fused chunked solve covers a heterogeneous batch
-— priced by its effective size ``Σ nᵢ`` through the stream heuristic.
+pluggable ``ChunkPolicy``) executed by two executors behind
+``SolverConfig.dispatch`` — ``PlanExecutor`` (staged: per-chunk dispatch +
+host reduced solve, per-phase ``ChunkTiming``) and ``FusedExecutor`` (the
+whole three-stage solve AOT-compiled into one donated-buffer executable,
+cached in a bounded LRU). Stage callables are cached module-wide per
+``(m, backend)``; the stage implementation is itself pluggable
+(``ReferenceBackend`` jnp stages, ``PallasBackend`` kernels, ``"auto"``
+resolving per host), and plans are memoised by their
+``(sizes, m, num_chunks)`` signature (all caches lock-protected: sessions
+solve from two threads). `ragged.py` fuses *mixed-size* systems into one
+block axis (exact decoupling via zeroed boundary couplings), so one fused
+chunked solve covers a heterogeneous batch — priced by its effective size
+``Σ nᵢ`` through the stream heuristic.
+
+Operand layouts (``layout.py``)
+-------------------------------
+Operand layout is a ``StageBackend`` concern, picked by
+``SolverConfig.layout``. ``"system-major"`` keeps fused systems concatenated
+(the chunk-sliceable order above). ``"interleaved"`` regathers a fused batch
+to the lane-major wide form ``(P, m, B)`` — systems on the kernels' minor
+(vector-lane) axis — so stage-1/stage-3 tiles work B systems per lane-block
+and the Stage-2 reduced solve becomes B *parallel* length-P scans instead of
+one serial ``Σ Pᵢ`` scan; ragged batches pad to ``P_max`` blocks with
+*exact* identity blocks. Both gathers are traced into the fused executable
+(callers and the serving engine never see the transposed layout, and buffer
+donation still applies to the caller-visible operands). ``"auto"`` (default)
+interleaves wide flat fused batches (B ≥ ``layout.AUTO_INTERLEAVE_MIN_BATCH``
+systems, bounded padding waste) and stays system-major otherwise.
 """
 
 from repro.core.tridiag.thomas import thomas, thomas_factor, thomas_solve_factored
@@ -87,6 +106,14 @@ from repro.core.tridiag.reference import (
     thomas_numpy,
     tridiag_matvec,
     tridiag_to_dense,
+)
+from repro.core.tridiag.layout import (
+    AUTO_INTERLEAVE_MIN_BATCH,
+    LAYOUTS,
+    deinterleave,
+    interleave,
+    interleave_operands,
+    resolve_layout,
 )
 from repro.core.tridiag.plan import (
     BACKENDS,
@@ -107,6 +134,7 @@ from repro.core.tridiag.plan import (
     executable_cache_stats,
     jitted_stage3_ghost,
     jitted_stages,
+    jitted_wide_stages,
     plan_cache_stats,
     price_chunks,
     resolve_backend,
@@ -173,6 +201,13 @@ __all__ = [
     "executable_cache_stats",
     "jitted_stage3_ghost",
     "jitted_stages",
+    "jitted_wide_stages",
+    "AUTO_INTERLEAVE_MIN_BATCH",
+    "LAYOUTS",
+    "deinterleave",
+    "interleave",
+    "interleave_operands",
+    "resolve_layout",
     "plan_cache_stats",
     "price_chunks",
     "resolve_backend",

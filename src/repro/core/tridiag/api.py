@@ -89,6 +89,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.tridiag.batched import fuse_systems, split_systems
+from repro.core.tridiag.layout import LAYOUTS
 from repro.core.tridiag.plan import (
     BACKENDS,
     BackendLike,
@@ -111,6 +112,7 @@ from repro.core.tridiag.ragged import System, fuse_ragged, split_ragged
 __all__ = [
     "AdmissionPolicy",
     "DISPATCH_MODES",
+    "LAYOUTS",
     "QueueFullError",
     "RequestCancelledError",
     "RequestTimedOutError",
@@ -237,6 +239,16 @@ class SolverConfig:
                    fused for the plain verbs and the serving path, staged
                    for the ``*_timed`` verbs so measurement campaigns keep
                    the breakdown the paper's Eq.-5 analysis needs.
+    ``layout``     operand layout for the device stages: ``"system-major"``
+                   (fused systems stay concatenated; chunk bounds slice the
+                   block axis), ``"interleaved"`` (batch-interleaved /
+                   lane-major: systems ride the kernels' minor axis and the
+                   reduced solve runs B parallel scans — the big win for
+                   many-small-system batches), or ``"auto"`` (default):
+                   interleave fused dispatches of flat batches at
+                   B ≥ ``layout.AUTO_INTERLEAVE_MIN_BATCH`` with bounded
+                   ragged padding, system-major otherwise. Layout conversion
+                   is traced into the executable — callers never see it.
     ``policy``     a :class:`~repro.core.tridiag.plan.ChunkPolicy` pricing
                    each dispatch (e.g. ``HeuristicChunkPolicy(fitted)``), or
                    None to use the fixed ``num_chunks``.
@@ -269,6 +281,7 @@ class SolverConfig:
     dtype: Optional[object] = None
     backend: BackendLike = "auto"
     dispatch: str = "auto"
+    layout: str = "auto"
     policy: Optional[ChunkPolicy] = None
     num_chunks: Optional[int] = None
     max_batch: int = 64
@@ -305,6 +318,12 @@ class SolverConfig:
                 f"dispatch={self.dispatch!r}: must be one of "
                 f"{sorted(DISPATCH_MODES)} ('auto' = fused solves, staged "
                 f"*_timed verbs)"
+            )
+        if self.layout not in LAYOUTS:
+            raise ValueError(
+                f"layout={self.layout!r}: must be one of {sorted(LAYOUTS)} "
+                f"('auto' = interleaved for wide fused batches, system-major "
+                f"otherwise)"
             )
         if self.policy is not None:
             if not isinstance(self.policy, ChunkPolicy):
@@ -493,6 +512,7 @@ class SolveEngine:
         backend: BackendLike = None,
         dtype=None,
         dispatch: str = "auto",
+        layout: str = "auto",
         max_queue: Optional[int] = None,
         on_result: Optional[Callable[[int, np.ndarray], None]] = None,
         on_error: Optional[Callable[[int, BaseException], None]] = None,
@@ -501,6 +521,10 @@ class SolveEngine:
         if dispatch not in DISPATCH_MODES:
             raise ValueError(
                 f"dispatch={dispatch!r}: must be one of {sorted(DISPATCH_MODES)}"
+            )
+        if layout not in LAYOUTS:
+            raise ValueError(
+                f"layout={layout!r}: must be one of {sorted(LAYOUTS)}"
             )
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue={max_queue}: must be >= 1 (or None)")
@@ -513,6 +537,7 @@ class SolveEngine:
         self.default_chunks = default_chunks
         self.dtype = dtype
         self.dispatch = dispatch
+        self.layout = layout
         self._eager = eager
         self._clock = clock
         # Serving dispatches are plain solves (no phase breakdown consumed),
@@ -525,9 +550,9 @@ class SolveEngine:
             self._executor = executor
         else:
             self._executor = (
-                PlanExecutor(backend=backend)
+                PlanExecutor(backend=backend, layout=layout)
                 if dispatch == "staged"
-                else FusedExecutor(backend=backend)
+                else FusedExecutor(backend=backend, layout=layout)
             )
         self._on_result = on_result
         self._on_error = on_error
@@ -902,8 +927,8 @@ class TridiagSession:
     def __init__(self, config: Optional[SolverConfig] = None):
         self.config = (SolverConfig() if config is None else config).validate()
         self.backend = resolve_backend(self.config.backend)
-        self._executor = PlanExecutor(backend=self.backend)
-        self._fused = FusedExecutor(backend=self.backend)
+        self._executor = PlanExecutor(backend=self.backend, layout=self.config.layout)
+        self._fused = FusedExecutor(backend=self.backend, layout=self.config.layout)
         if self.config.plan_cache_capacity is not None:
             set_plan_cache_capacity(self.config.plan_cache_capacity)
         self._cv = threading.Condition()
@@ -920,6 +945,7 @@ class TridiagSession:
             backend=self.backend,
             dtype=self.config.dtype,
             dispatch=self.config.dispatch,
+            layout=self.config.layout,
             max_queue=self.config.max_queue,
             on_result=lambda rid, x: self._resolve_future(rid, value=x),
             on_error=lambda rid, e: self._resolve_future(rid, error=e),

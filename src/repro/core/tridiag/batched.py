@@ -97,7 +97,9 @@ def fuse_systems(
     du = np.array(du, copy=True)
     dl[..., :, 0] = 0.0
     du[..., :, -1] = 0.0
-    flat = lambda a: np.ascontiguousarray(np.asarray(a).reshape(*a.shape[:-2], -1))
+    def flat(a):
+        return np.ascontiguousarray(np.asarray(a).reshape(*a.shape[:-2], -1))
+
     return flat(dl), flat(d), flat(du), flat(b)
 
 

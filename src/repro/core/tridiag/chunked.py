@@ -26,12 +26,7 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.tridiag.plan import (  # noqa: F401  (ChunkTiming re-exported)
-    ChunkTiming,
-    PlanExecutor,
-    SolvePlan,
-    build_plan,
-)
+from repro.core.tridiag.plan import ChunkTiming, SolvePlan  # noqa: F401  (ChunkTiming re-exported)
 
 
 class ChunkedPartitionSolver:

@@ -81,9 +81,10 @@ def partition_stage1(
 
     y_last, v_last, w_last = y[..., :, m - 2], v[..., :, m - 2], w[..., :, m - 2]
     # Next block's first interior row spikes (zero-padded past the last block).
-    pad = lambda a: jnp.concatenate(
-        [a[..., 1:, 0], jnp.zeros_like(a[..., :1, 0])], axis=-1
-    )
+    def pad(a):
+        return jnp.concatenate(
+            [a[..., 1:, 0], jnp.zeros_like(a[..., :1, 0])], axis=-1
+        )
     y_nf, v_nf, w_nf = pad(y), pad(v), pad(w)
 
     red_dl = -aL * v_last

@@ -99,7 +99,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.tridiag import layout as layout_mod
 from repro.core.tridiag import partition
+from repro.core.tridiag.layout import resolve_layout
 from repro.core.tridiag.reference import thomas_numpy
 from repro.core.tridiag.thomas import thomas as thomas_scan
 
@@ -152,6 +154,16 @@ class StageBackend:
     Pallas backend routes 1-D/2-D reduced systems through the
     ``repro.kernels.thomas`` kernel. The staged path never calls it — its
     Stage 2 stays on the host (``thomas_numpy``), as in the paper.
+
+    Operand *layout* is also a backend concern: the ``make_wide_*`` trio are
+    the batch-interleaved (lane-major) counterparts, consuming wide operands
+    as laid out by :mod:`repro.core.tridiag.layout` — stage 1 takes
+    ``(P, m, B)`` diagonals and returns wide coeffs (spikes ``(P, m-1, B)``,
+    reduced rows ``(P, B)``); the wide reduced solve runs B parallel length-P
+    scans on ``(P, B)`` rows; wide stage 3 returns the ``(P, m, B)``
+    solution. The base class supplies pure-jnp defaults, so every backend
+    (including downstream subclasses) supports ``layout="interleaved"`` out
+    of the box; `PallasBackend` overrides them with the wide-grid kernels.
     """
 
     name = "abstract"
@@ -164,6 +176,15 @@ class StageBackend:
 
     def make_reduced_solve(self) -> Callable:
         return thomas_scan
+
+    def make_wide_stage1(self, m: int) -> Callable:
+        return jax.jit(partial(layout_mod.partition_stage1_wide, m=m))
+
+    def make_wide_stage3(self) -> Callable:
+        return jax.jit(layout_mod.partition_stage3_wide)
+
+    def make_wide_reduced_solve(self) -> Callable:
+        return layout_mod.thomas_wide
 
 
 @dataclass(frozen=True)
@@ -192,6 +213,10 @@ class PallasBackend(StageBackend):
 
     name = "pallas"
     block_p: int = 512
+    # Wide (interleaved-layout) grid tiles: systems per lane-block and
+    # partition blocks per grid step (see ``stage1_tiled_wide``).
+    block_b: int = 256
+    block_rows: int = 32
     interpret: Optional[bool] = None
 
     def make_stage1(self, m: int) -> Callable:
@@ -255,6 +280,41 @@ class PallasBackend(StageBackend):
 
         return reduced_solve
 
+    def make_wide_stage1(self, m: int) -> Callable:
+        from repro.kernels.partition_stage1.ops import partition_stage1_pallas_wide
+
+        return partial(
+            partition_stage1_pallas_wide,
+            m=m,
+            block_rows=self.block_rows,
+            block_b=self.block_b,
+            interpret=self.interpret,
+        )
+
+    def make_wide_stage3(self) -> Callable:
+        from repro.kernels.partition_stage3.ops import partition_stage3_pallas_wide
+
+        def wide_stage3(coeffs, s):
+            # Same precision contract as make_stage3: kernel refs are typed,
+            # so a host-fp64 interface vector is cast to the spikes' dtype.
+            s = jnp.asarray(s, dtype=jnp.asarray(coeffs.y).dtype)
+            return partition_stage3_pallas_wide(
+                coeffs,
+                s,
+                block_rows=self.block_rows,
+                block_b=self.block_b,
+                interpret=self.interpret,
+            )
+
+        return wide_stage3
+
+    def make_wide_reduced_solve(self) -> Callable:
+        from repro.kernels.thomas.ops import thomas_pallas_wide
+
+        return partial(
+            thomas_pallas_wide, block_b=self.block_b, interpret=self.interpret
+        )
+
 
 @dataclass(frozen=True)
 class AutoBackend(StageBackend):
@@ -279,6 +339,15 @@ class AutoBackend(StageBackend):
 
     def make_reduced_solve(self) -> Callable:
         return self.resolve().make_reduced_solve()
+
+    def make_wide_stage1(self, m: int) -> Callable:
+        return self.resolve().make_wide_stage1(m)
+
+    def make_wide_stage3(self) -> Callable:
+        return self.resolve().make_wide_stage3()
+
+    def make_wide_reduced_solve(self) -> Callable:
+        return self.resolve().make_wide_reduced_solve()
 
 
 #: Registry consulted when ``backend=`` is given as a string; keys are the
@@ -327,6 +396,8 @@ _CACHE_LOCK = threading.RLock()
 _STAGE1_CACHE: Dict[Tuple[int, StageBackend], Callable] = {}
 _STAGE3_CACHE: Dict[StageBackend, Callable] = {}
 _STAGE3_GHOST_CACHE: Dict[StageBackend, Callable] = {}
+_WIDE_STAGE1_CACHE: Dict[Tuple[int, StageBackend], Callable] = {}
+_WIDE_STAGE3_CACHE: Dict[StageBackend, Callable] = {}
 
 
 def jitted_stages(m: int, backend: BackendLike = None) -> Tuple[Callable, Callable]:
@@ -341,6 +412,22 @@ def jitted_stages(m: int, backend: BackendLike = None) -> Tuple[Callable, Callab
         if backend not in _STAGE3_CACHE:
             _STAGE3_CACHE[backend] = backend.make_stage3()
         return _STAGE1_CACHE[key], _STAGE3_CACHE[backend]
+
+
+def jitted_wide_stages(
+    m: int, backend: BackendLike = None
+) -> Tuple[Callable, Callable]:
+    """Cached ``(wide_stage1, wide_stage3)`` — the interleaved-layout twins
+    of :func:`jitted_stages`, consuming (P, m, B) operands (systems on the
+    minor axis; see :mod:`repro.core.tridiag.layout`)."""
+    backend = resolve_backend(backend)
+    key = (m, backend)
+    with _CACHE_LOCK:
+        if key not in _WIDE_STAGE1_CACHE:
+            _WIDE_STAGE1_CACHE[key] = backend.make_wide_stage1(m)
+        if backend not in _WIDE_STAGE3_CACHE:
+            _WIDE_STAGE3_CACHE[backend] = backend.make_wide_stage3()
+        return _WIDE_STAGE1_CACHE[key], _WIDE_STAGE3_CACHE[backend]
 
 
 def jitted_stage3_ghost(backend: BackendLike = None) -> Callable:
@@ -658,10 +745,24 @@ class PlanExecutor:
     diagonals/RHS — 1-D over ``plan.total_size``, or with extra leading dims
     that pass straight through the stages (on `PallasBackend` a single
     leading batch axis routes to the batched-grid kernels).
+
+    ``layout`` picks the operand layout for the device stages. The default
+    ``"auto"`` resolves to system-major on this (staged) executor — the
+    chunked per-phase timing campaigns are its raison d'être, and chunk
+    bounds slice the system-major block axis. An explicit ``"interleaved"``
+    runs the whole-batch wide-stage variant instead (one lane-major stage-1
+    and stage-3 dispatch, host reduced solve on (P, B) rows): per-phase
+    timing stays observable, but the plan's chunk partition does not apply —
+    the wide grid itself is the parallel axis.
     """
 
-    def __init__(self, backend: BackendLike = None):
+    def __init__(self, backend: BackendLike = None, *, layout: str = "auto"):
         self.backend = resolve_backend(backend)
+        if layout not in layout_mod.LAYOUTS:
+            raise ValueError(
+                f"layout must be one of {layout_mod.LAYOUTS}, got {layout!r}"
+            )
+        self.layout = layout
 
     def execute(
         self,
@@ -677,6 +778,11 @@ class PlanExecutor:
             raise ValueError(
                 f"operands have {n} rows but the plan lays out {plan.total_size}"
             )
+        layout = resolve_layout(
+            self.layout, plan.sizes, m, fused=False, lead_ndim=np.ndim(d) - 1
+        )
+        if layout == "interleaved":
+            return self._execute_interleaved(plan, dl, d, du, b)
 
         def row(a, lo, hi):
             # Fast path: operands already on device slice lazily — no host
@@ -747,6 +853,47 @@ class PlanExecutor:
         )
         return x, timing
 
+    def _execute_interleaved(
+        self, plan: SolvePlan, dl, d, du, b
+    ) -> Tuple[np.ndarray, ChunkTiming]:
+        """Whole-batch staged solve on the wide (lane-major) layout.
+
+        Same three-phase structure as :meth:`execute` — device stage 1, host
+        fp64 reduced solve, device stage 3 — but on interleaved operands: one
+        wide dispatch per stage (the lane-block grid replaces the chunk
+        loop), and the host Stage 2 solves B parallel length-P systems.
+        """
+        m, sizes = plan.m, plan.sizes
+        wide_stage1, wide_stage3 = jitted_wide_stages(m, self.backend)
+
+        t0 = time.perf_counter()
+        ops = layout_mod.interleave_operands_jit(dl, d, du, b, sizes=sizes, m=m)
+        c = wide_stage1(*ops)
+        # Block only when the host needs the reduced rows (D2H analogue).
+        red = [
+            np.asarray(getattr(c, f))
+            for f in ("red_dl", "red_d", "red_du", "red_b")
+        ]  # (P, B) each
+        t1 = time.perf_counter()
+
+        # ---- Stage 2: host-side reduced solve, batched over the B lanes.
+        s = thomas_numpy(*(r.T for r in red)).T
+        t2 = time.perf_counter()
+
+        xw = wide_stage3(c, jnp.asarray(s, dtype=c.y.dtype))
+        x = np.asarray(layout_mod.deinterleave_jit(xw, sizes=sizes, m=m))
+        t3 = time.perf_counter()
+
+        timing = ChunkTiming(
+            num_chunks=plan.num_chunks,
+            t_stage1_ms=(t1 - t0) * 1e3,
+            t_stage2_ms=(t2 - t1) * 1e3,
+            t_stage3_ms=(t3 - t2) * 1e3,
+            t_total_ms=(t3 - t0) * 1e3,
+            n=plan.total_size,
+        )
+        return x, timing
+
 
 def _stage3_with_ghost(stage3_fn, coeffs, s_chunk, s_left_edge):
     """Run stage 3 on a chunk whose left neighbour lives in another chunk.
@@ -811,6 +958,7 @@ def _fused_callable(
     backend: StageBackend,
     donate: bool,
     avals: Sequence[jax.ShapeDtypeStruct],
+    layout: str = "system-major",
 ) -> Callable:
     """Trace + AOT-compile the whole three-stage solve for ``plan``.
 
@@ -822,6 +970,14 @@ def _fused_callable(
     to XLA (``donate_argnums=(0, 1, 2, 3)``), so the solve can reuse their
     buffers in place — callers passing device arrays give up ownership.
 
+    ``layout="interleaved"`` traces the lane-major pipeline instead: the
+    interleave gather, wide stage 1, wide (B-parallel) reduced solve, wide
+    stage 3 and the deinterleave gather all live inside the one executable —
+    callers still hand over (and donate) the fused 1-D operands and receive
+    the fused 1-D solution; the transposed layout never escapes. The plan's
+    chunk partition does not apply on this path (the wide grid is the
+    parallel axis); the plan still keys the plan/executable caches.
+
     Compilation happens HERE (``jit(...).lower(*avals).compile()``), not at
     first call: only one of the four donated buffers can back the single
     output, so XLA warns "Some donated buffers were not usable" once per
@@ -831,32 +987,50 @@ def _fused_callable(
     sees its own diagnostics).
     """
     m = plan.m
-    stage1, _ = jitted_stages(m, backend)
-    stage3_ghost = jitted_stage3_ghost(backend)
-    reduced_solve = backend.make_reduced_solve()
 
-    def fused(dl, d, du, b):
-        coeffs = []
-        for (lo, hi), (_, hi_halo) in zip(plan.chunk_bounds, plan.halo_bounds):
-            sl = lambda a: jax.lax.slice_in_dim(a, lo * m, hi_halo * m, axis=-1)
-            coeffs.append(_trim_halo(stage1(sl(dl), sl(d), sl(du), sl(b)), hi - lo))
-        red = [
-            jnp.concatenate([getattr(c, f) for c in coeffs], axis=-1)
-            if len(coeffs) > 1
-            else getattr(coeffs[0], f)
-            for f in ("red_dl", "red_d", "red_du", "red_b")
-        ]
-        s = reduced_solve(*red)
-        outs = []
-        for (lo, hi), c in zip(plan.chunk_bounds, coeffs):
-            s_chunk = jax.lax.slice_in_dim(s, lo, hi, axis=-1)
-            s_left_edge = (
-                jnp.zeros_like(s[..., :1])
-                if lo == 0
-                else jax.lax.slice_in_dim(s, lo - 1, lo, axis=-1)
-            )
-            outs.append(stage3_ghost(c, s_chunk, s_left_edge))
-        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+    if layout == "interleaved":
+        sizes = plan.sizes
+        wide_stage1, wide_stage3 = jitted_wide_stages(m, backend)
+        wide_reduced = backend.make_wide_reduced_solve()
+
+        def fused(dl, d, du, b):
+            ops = layout_mod.interleave_operands(dl, d, du, b, sizes, m)
+            c = wide_stage1(*ops)
+            s = wide_reduced(c.red_dl, c.red_d, c.red_du, c.red_b)
+            xw = wide_stage3(c, s)
+            return layout_mod.deinterleave(xw, sizes, m)
+
+    else:
+        stage1, _ = jitted_stages(m, backend)
+        stage3_ghost = jitted_stage3_ghost(backend)
+        reduced_solve = backend.make_reduced_solve()
+
+        def fused(dl, d, du, b):
+            coeffs = []
+            for (lo, hi), (_, hi_halo) in zip(plan.chunk_bounds, plan.halo_bounds):
+                def sl(a, lo=lo, hi_halo=hi_halo):
+                    return jax.lax.slice_in_dim(a, lo * m, hi_halo * m, axis=-1)
+
+                coeffs.append(
+                    _trim_halo(stage1(sl(dl), sl(d), sl(du), sl(b)), hi - lo)
+                )
+            red = [
+                jnp.concatenate([getattr(c, f) for c in coeffs], axis=-1)
+                if len(coeffs) > 1
+                else getattr(coeffs[0], f)
+                for f in ("red_dl", "red_d", "red_du", "red_b")
+            ]
+            s = reduced_solve(*red)
+            outs = []
+            for (lo, hi), c in zip(plan.chunk_bounds, coeffs):
+                s_chunk = jax.lax.slice_in_dim(s, lo, hi, axis=-1)
+                s_left_edge = (
+                    jnp.zeros_like(s[..., :1])
+                    if lo == 0
+                    else jax.lax.slice_in_dim(s, lo - 1, lo, axis=-1)
+                )
+                outs.append(stage3_ghost(c, s_chunk, s_left_edge))
+            return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
 
     if not donate:
         return jax.jit(fused)
@@ -891,19 +1065,45 @@ class FusedExecutor:
     jax's donated-buffer error. Pass ``donate=False`` (or dispatch staged)
     to keep device operands alive.
 
+    ``layout`` ("system-major" | "interleaved" | "auto", default "auto")
+    picks the operand layout traced into the executable; "auto" interleaves
+    flat fused batches of ≥ `layout.AUTO_INTERLEAVE_MIN_BATCH` systems (see
+    :func:`repro.core.tridiag.layout.resolve_layout`). The resolved layout
+    is part of the executable-cache key — distinct layouts never share an
+    executable.
+
     Executables are cached in the module-level LRU (`executable_cache_stats`)
     under `_CACHE_LOCK`, so sessions can hit it from caller + worker threads.
     """
 
-    def __init__(self, backend: BackendLike = None, *, donate: bool = True):
+    def __init__(
+        self,
+        backend: BackendLike = None,
+        *,
+        donate: bool = True,
+        layout: str = "auto",
+    ):
         self.backend = resolve_backend(backend)
         self.donate = donate
+        if layout not in layout_mod.LAYOUTS:
+            raise ValueError(
+                f"layout must be one of {layout_mod.LAYOUTS}, got {layout!r}"
+            )
+        self.layout = layout
 
     def _executable(self, plan: SolvePlan, ops: Sequence) -> Callable:
+        layout = resolve_layout(
+            self.layout,
+            plan.sizes,
+            plan.m,
+            fused=True,
+            lead_ndim=ops[1].ndim - 1,
+        )
         key = (
             plan,
             self.backend,
             self.donate,
+            layout,
             tuple(np.dtype(jax.dtypes.canonicalize_dtype(a.dtype)).name for a in ops),
             tuple(a.shape[:-1] for a in ops),
         )
@@ -921,7 +1121,7 @@ class FusedExecutor:
             jax.ShapeDtypeStruct(a.shape, jax.dtypes.canonicalize_dtype(a.dtype))
             for a in ops
         ]
-        fn = _fused_callable(plan, self.backend, self.donate, avals)
+        fn = _fused_callable(plan, self.backend, self.donate, avals, layout)
         with _CACHE_LOCK:
             existing = _EXEC_CACHE.get(key)
             if existing is not None:

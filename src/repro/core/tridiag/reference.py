@@ -73,5 +73,7 @@ def make_diag_dominant_system(
     d = sign * (mag * dominance + rng.uniform(0.5, 1.5, size=shape))
     x_true = rng.standard_normal(shape)
     b = tridiag_matvec(dl, d, du, x_true)
-    to = lambda a: np.asarray(a, dtype=dtype)
+    def to(a):
+        return np.asarray(a, dtype=dtype)
+
     return to(dl), to(d), to(du), to(b), to(x_true)

@@ -20,22 +20,27 @@ HBM→VMEM pipeline — the TPU analogue of the CUDA-stream copy/compute overlap
 that the paper tunes.
 """
 
-from repro.kernels.thomas.ops import thomas_pallas
+from repro.kernels.thomas.ops import thomas_pallas, thomas_pallas_wide
 from repro.kernels.partition_stage1.ops import (
     partition_stage1_pallas,
     partition_stage1_pallas_batched,
+    partition_stage1_pallas_wide,
 )
 from repro.kernels.partition_stage3.ops import (
     partition_stage3_pallas,
     partition_stage3_pallas_batched,
+    partition_stage3_pallas_wide,
 )
 from repro.kernels.tridiag_matvec.ops import tridiag_matvec_pallas
 
 __all__ = [
     "thomas_pallas",
+    "thomas_pallas_wide",
     "partition_stage1_pallas",
     "partition_stage1_pallas_batched",
+    "partition_stage1_pallas_wide",
     "partition_stage3_pallas",
     "partition_stage3_pallas_batched",
+    "partition_stage3_pallas_wide",
     "tridiag_matvec_pallas",
 ]

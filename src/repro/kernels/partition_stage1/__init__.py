@@ -1,6 +1,11 @@
 from repro.kernels.partition_stage1.ops import (
     partition_stage1_pallas,
     partition_stage1_pallas_batched,
+    partition_stage1_pallas_wide,
 )
 
-__all__ = ["partition_stage1_pallas", "partition_stage1_pallas_batched"]
+__all__ = [
+    "partition_stage1_pallas",
+    "partition_stage1_pallas_batched",
+    "partition_stage1_pallas_wide",
+]

@@ -100,6 +100,94 @@ def stage1_tiled(
     )(dlT, dT, duT, bT)
 
 
+def _stage1_kernel_wide(
+    dl_ref, d_ref, du_ref, b_ref, y_ref, v_ref, w_ref, dhat_ref, *, m: int
+):
+    """Interleaved-layout body: tiles are (block rows, m, lane-block of
+    systems). Same recurrence as ``_stage1_kernel`` along the middle (m)
+    axis, vectorized over the leading block-row axis *and* the lanes — every
+    lane is a different system, every leading row an independent block."""
+    mi = m - 1
+
+    dhat_ref[:, 0:1, :] = d_ref[:, 0:1, :]
+    y_ref[:, 0:1, :] = b_ref[:, 0:1, :]
+    v_ref[:, 0:1, :] = dl_ref[:, 0:1, :]
+    w_ref[...] = jnp.zeros(w_ref.shape, w_ref.dtype)
+
+    def fwd(i, carry):
+        wgt = dl_ref[:, pl.ds(i, 1), :] / dhat_ref[:, pl.ds(i - 1, 1), :]
+        dhat_ref[:, pl.ds(i, 1), :] = (
+            d_ref[:, pl.ds(i, 1), :] - wgt * du_ref[:, pl.ds(i - 1, 1), :]
+        )
+        y_ref[:, pl.ds(i, 1), :] = (
+            b_ref[:, pl.ds(i, 1), :] - wgt * y_ref[:, pl.ds(i - 1, 1), :]
+        )
+        v_ref[:, pl.ds(i, 1), :] = -wgt * v_ref[:, pl.ds(i - 1, 1), :]
+        return carry
+
+    jax.lax.fori_loop(1, mi, fwd, 0)
+
+    last = mi - 1
+    dhat_last = dhat_ref[:, pl.ds(last, 1), :]
+    y_ref[:, pl.ds(last, 1), :] = y_ref[:, pl.ds(last, 1), :] / dhat_last
+    v_ref[:, pl.ds(last, 1), :] = v_ref[:, pl.ds(last, 1), :] / dhat_last
+    w_ref[:, pl.ds(last, 1), :] = du_ref[:, pl.ds(last, 1), :] / dhat_last
+
+    def bwd(j, carry):
+        i = last - 1 - j
+        du_i = du_ref[:, pl.ds(i, 1), :]
+        dhat_i = dhat_ref[:, pl.ds(i, 1), :]
+        y_ref[:, pl.ds(i, 1), :] = (
+            y_ref[:, pl.ds(i, 1), :] - du_i * y_ref[:, pl.ds(i + 1, 1), :]
+        ) / dhat_i
+        v_ref[:, pl.ds(i, 1), :] = (
+            v_ref[:, pl.ds(i, 1), :] - du_i * v_ref[:, pl.ds(i + 1, 1), :]
+        ) / dhat_i
+        w_ref[:, pl.ds(i, 1), :] = (
+            w_ref[:, pl.ds(i, 1), :] - du_i * w_ref[:, pl.ds(i + 1, 1), :]
+        ) / dhat_i
+        return carry
+
+    jax.lax.fori_loop(0, last, bwd, 0)
+
+
+def stage1_tiled_wide(
+    dlw: jax.Array,
+    dw: jax.Array,
+    duw: jax.Array,
+    bw: jax.Array,
+    *,
+    m: int,
+    block_rows: int,
+    block_b: int,
+    interpret: bool,
+):
+    """Wide-batch grid over interleaved (P, m, B) operands.
+
+    Grid = (B // block_b, P // block_rows): each step owns a lane-block of
+    ``block_b`` systems × ``block_rows`` partition blocks — the batch axis is
+    the minor/lane axis of every tile, so at B ≫ 1 the VPU lanes read
+    contiguous (coalesced) data instead of the per-system strides of
+    ``stage1_tiled_batched``.
+    """
+    p, _, bt = dw.shape
+    grid = (bt // block_b, p // block_rows)
+    in_spec = pl.BlockSpec((block_rows, m, block_b), lambda bi, i: (i, 0, bi))
+    out_spec = pl.BlockSpec(
+        (block_rows, m - 1, block_b), lambda bi, i: (i, 0, bi)
+    )
+    out_shape = jax.ShapeDtypeStruct((p, m - 1, bt), dw.dtype)
+    return pl.pallas_call(
+        functools.partial(_stage1_kernel_wide, m=m),
+        grid=grid,
+        in_specs=[in_spec] * 4,
+        out_specs=[out_spec] * 3,
+        out_shape=[out_shape] * 3,
+        scratch_shapes=[pltpu.VMEM((block_rows, m - 1, block_b), dw.dtype)],
+        interpret=interpret,
+    )(dlw, dw, duw, bw)
+
+
 def stage1_tiled_batched(
     dlT: jax.Array,
     dT: jax.Array,

@@ -3,11 +3,13 @@ from repro.kernels.partition_stage3.ops import (
     partition_solve_pallas_batched,
     partition_stage3_pallas,
     partition_stage3_pallas_batched,
+    partition_stage3_pallas_wide,
 )
 
 __all__ = [
     "partition_stage3_pallas",
     "partition_stage3_pallas_batched",
+    "partition_stage3_pallas_wide",
     "partition_solve_pallas",
     "partition_solve_pallas_batched",
 ]

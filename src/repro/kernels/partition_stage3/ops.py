@@ -10,7 +10,11 @@ import jax.numpy as jnp
 from repro.core.tridiag.partition import PartitionCoeffs
 from repro.core.tridiag.thomas import thomas
 from repro.kernels import common
-from repro.kernels.partition_stage3.stage3 import stage3_tiled, stage3_tiled_batched
+from repro.kernels.partition_stage3.stage3 import (
+    stage3_tiled,
+    stage3_tiled_batched,
+    stage3_tiled_wide,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
@@ -18,7 +22,9 @@ def _stage3_impl(y, v, w, s, *, block_p: int, interpret: bool):
     p, mi = y.shape
     m = mi + 1
     pp = common.round_up(p, block_p)
-    padT = lambda a: common.pad_axis_to(a.T, pp, axis=1)
+    def padT(a):
+        return common.pad_axis_to(a.T, pp, axis=1)
+
     s_left = jnp.concatenate([jnp.zeros_like(s[:1]), s[:-1]])
     xT = stage3_tiled(
         padT(y), padT(v), padT(w),
@@ -63,12 +69,56 @@ def partition_solve_pallas(
     return partition_stage3_pallas(coeffs, s, interpret=interpret)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "block_b", "interpret")
+)
+def _stage3_impl_wide(y, v, w, s, *, block_rows: int, block_b: int, interpret: bool):
+    p, mi, bsz = y.shape
+    m = mi + 1
+    pr = common.round_up(p, block_rows)
+    bp = common.round_up(bsz, block_b)
+    # s_left shifts along the block axis; row 0 is every system's first block.
+    s_left = jnp.concatenate([jnp.zeros_like(s[:1]), s[:-1]], axis=0)
+    def pad3(a):
+        return common.pad_axis_to(common.pad_axis_to(a, bp, axis=2), pr, axis=0)
+
+    xw = stage3_tiled_wide(
+        pad3(y), pad3(v), pad3(w),
+        pad3(s[:, None, :]), pad3(s_left[:, None, :]),
+        m=m, block_rows=block_rows, block_b=block_b, interpret=interpret,
+    )
+    return xw[:p, :, :bsz]
+
+
+def partition_stage3_pallas_wide(
+    coeffs: PartitionCoeffs,
+    s: jax.Array,
+    *,
+    block_rows: int = 32,
+    block_b: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Back-substitution on batch-interleaved coeffs: (P, m-1, B) spikes +
+    (P, B) interface values → (P, m, B) wide solution."""
+    if interpret is None:
+        interpret = common.interpret_default()
+    p, _, bsz = coeffs.y.shape
+    block_b = min(block_b, common.round_up(bsz, common.LANES))
+    block_rows = min(block_rows, common.round_up(p, common.SUBLANES))
+    return _stage3_impl_wide(
+        coeffs.y, coeffs.v, coeffs.w, s,
+        block_rows=block_rows, block_b=block_b, interpret=interpret,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
 def _stage3_impl_batched(y, v, w, s, *, block_p: int, interpret: bool):
     bsz, p, mi = y.shape
     m = mi + 1
     pp = common.round_up(p, block_p)
-    padT = lambda a: common.pad_axis_to(a.transpose(0, 2, 1), pp, axis=2)
+    def padT(a):
+        return common.pad_axis_to(a.transpose(0, 2, 1), pp, axis=2)
+
     s_left = jnp.concatenate([jnp.zeros_like(s[:, :1]), s[:, :-1]], axis=1)
     xT = stage3_tiled_batched(
         padT(y), padT(v), padT(w),

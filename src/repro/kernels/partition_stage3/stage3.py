@@ -48,6 +48,47 @@ def stage3_tiled(
     )(yT, vT, wT, s, s_left)
 
 
+def _stage3_kernel_wide(y_ref, v_ref, w_ref, s_ref, sl_ref, x_ref, *, m: int):
+    """Interleaved-layout body on (block rows, m-1, lane-block) spike tiles
+    with (block rows, 1, lane-block) interface rows broadcast over axis 1."""
+    s = s_ref[...]
+    sl = sl_ref[...]
+    x_ref[:, 0 : m - 1, :] = y_ref[...] - v_ref[...] * sl - w_ref[...] * s
+    x_ref[:, m - 1 : m, :] = s
+
+
+def stage3_tiled_wide(
+    yw: jax.Array,
+    vw: jax.Array,
+    ww: jax.Array,
+    s: jax.Array,
+    s_left: jax.Array,
+    *,
+    m: int,
+    block_rows: int,
+    block_b: int,
+    interpret: bool,
+) -> jax.Array:
+    """Wide-batch grid: interleaved (P, m-1, B) spikes + (P, 1, B) interface
+    values → (P, m, B) solution. Grid = (B // block_b, P // block_rows); the
+    systems ride the lanes (see ``stage1_tiled_wide``)."""
+    p, _, bt = yw.shape
+    grid = (bt // block_b, p // block_rows)
+    spike_spec = pl.BlockSpec(
+        (block_rows, m - 1, block_b), lambda bi, i: (i, 0, bi)
+    )
+    row_spec = pl.BlockSpec((block_rows, 1, block_b), lambda bi, i: (i, 0, bi))
+    out_spec = pl.BlockSpec((block_rows, m, block_b), lambda bi, i: (i, 0, bi))
+    return pl.pallas_call(
+        functools.partial(_stage3_kernel_wide, m=m),
+        grid=grid,
+        in_specs=[spike_spec] * 3 + [row_spec] * 2,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((p, m, bt), yw.dtype),
+        interpret=interpret,
+    )(yw, vw, ww, s, s_left)
+
+
 def stage3_tiled_batched(
     yT: jax.Array,
     vT: jax.Array,

@@ -1,3 +1,3 @@
-from repro.kernels.thomas.ops import thomas_pallas
+from repro.kernels.thomas.ops import thomas_pallas, thomas_pallas_wide
 
-__all__ = ["thomas_pallas"]
+__all__ = ["thomas_pallas", "thomas_pallas_wide"]

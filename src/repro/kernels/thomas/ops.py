@@ -52,3 +52,41 @@ def thomas_pallas(
         )[0]
     block_b = min(block_b, common.round_up(d.shape[0], common.LANES))
     return _thomas_impl(dl, d, du, b, block_b=block_b, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _thomas_impl_wide(dl, d, du, b, *, block_b: int, interpret: bool):
+    _, bsz = d.shape
+    bp = common.round_up(bsz, block_b)
+    # Identity-pad the lane axis (d=1) so padded lanes never divide by 0.
+    dlw = common.pad_axis_to(dl, bp, axis=1)
+    dw = common.pad_axis_to(d, bp, axis=1, value=1.0)
+    duw = common.pad_axis_to(du, bp, axis=1)
+    bw = common.pad_axis_to(b, bp, axis=1)
+    xw = thomas_tiled(dlw, dw, duw, bw, block_b=block_b, interpret=interpret)
+    return xw[:, :bsz]
+
+
+def thomas_pallas_wide(
+    dl: jax.Array,
+    d: jax.Array,
+    du: jax.Array,
+    b: jax.Array,
+    *,
+    block_b: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Lane-major Thomas: (n, B) operands already interleaved, solve axis 0.
+
+    The Stage-2 reduced solver of the interleaved fused path: the wide
+    reduced rows come out of ``partition_stage1_pallas_wide`` as (P, B) and
+    go straight onto the lanes with no transpose — grid tiles are lane-blocks
+    of systems, so B parallel length-P scans replace one serial Σ Pᵢ scan.
+    """
+    if interpret is None:
+        interpret = common.interpret_default()
+    dl, d, du, b = (jnp.asarray(a) for a in (dl, d, du, b))
+    if d.ndim != 2:
+        raise ValueError(f"expected interleaved (n, B) operands, got {d.shape}")
+    block_b = min(block_b, common.round_up(d.shape[1], common.LANES))
+    return _thomas_impl_wide(dl, d, du, b, block_b=block_b, interpret=interpret)

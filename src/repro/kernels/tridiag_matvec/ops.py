@@ -19,7 +19,9 @@ def _matvec_impl(dl, d, du, x, *, block_r: int, interpret: bool):
     rows = common.cdiv(n, common.LANES)
     rows_p = common.round_up(rows, block_r)
     shape2 = (rows_p, common.LANES)
-    to2 = lambda a: common.pad_axis_to(a, rows_p * common.LANES, axis=0).reshape(shape2)
+    def to2(a):
+        return common.pad_axis_to(a, rows_p * common.LANES, axis=0).reshape(shape2)
+
     r2 = matvec_tiled(
         to2(dl), to2(d), to2(du), to2(xl), to2(x), to2(xr),
         block_r=block_r, interpret=interpret,

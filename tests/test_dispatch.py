@@ -23,6 +23,10 @@ from repro.api import (  # noqa: E402
     SolverConfig,
     TridiagSession,
 )
+from repro.core.tridiag.layout import (  # noqa: E402
+    AUTO_INTERLEAVE_MIN_BATCH,
+    resolve_layout,
+)
 from repro.core.tridiag.plan import (  # noqa: E402
     FusedExecutor,
     PlanExecutor,
@@ -225,6 +229,114 @@ def test_executable_cache_eviction_churn_stays_correct():
             assert _rel_err(x, thomas_numpy(*ops)) < 1e-11
     stats = executable_cache_stats()
     assert stats["size"] <= 2 and stats["evictions"] >= len(cases)
+
+
+# ------------------------------------------------------------ layouts --------
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("layout", ["system-major", "interleaved"])
+def test_layout_parity_on_all_paths(backend, layout):
+    """Explicit layouts agree with the fp64 oracle (and with each other's
+    tolerance) on the single, batched and ragged paths, staged and fused,
+    both dtypes."""
+    for dtype in (np.float64, np.float32):
+        base = SolverConfig(
+            m=10, num_chunks=2, backend=backend, dtype=dtype, layout=layout
+        )
+        tol = TOL[dtype]
+        staged = TridiagSession(base.replace(dispatch="staged"))
+        fused = TridiagSession(base.replace(dispatch="fused"))
+
+        dl, d, du, b, _ = make_diag_dominant_system(200, seed=11, dtype=dtype)
+        ref = thomas_numpy(dl, d, du, b)
+        assert _rel_err(staged.solve(dl, d, du, b), ref) < tol
+        assert _rel_err(fused.solve(dl, d, du, b), ref) < tol
+
+        DL, D, DU, B, _ = make_diag_dominant_system(
+            120, seed=12, batch=(8,), dtype=dtype
+        )
+        for sess in (staged, fused):
+            xb = sess.solve_batched(DL, D, DU, B)
+            for i in range(8):
+                assert _rel_err(xb[i], thomas_numpy(DL[i], D[i], DU[i], B[i])) < tol
+
+        systems = _mk_systems((60, 240, 120), dtype=dtype, seed0=13)
+        for sess in (staged, fused):
+            for xi, s in zip(sess.solve_many(systems), systems):
+                assert _rel_err(xi, thomas_numpy(*s)) < tol
+
+
+def test_executable_cache_keys_layouts_separately():
+    """The same plan compiled under two layouts must get two cache entries."""
+    dl, d, du, b, _ = make_diag_dominant_system(200, seed=14)
+    plan = build_plan(200, 10, num_chunks=2)
+    sm = FusedExecutor("reference", layout="system-major")
+    il = FusedExecutor("reference", layout="interleaved")
+    ref = thomas_numpy(dl, d, du, b)
+
+    x, _ = sm.execute(plan, dl, d, du, b)
+    assert _rel_err(x, ref) < 1e-11
+    x, _ = il.execute(plan, dl, d, du, b)
+    assert _rel_err(x, ref) < 1e-11
+    stats = executable_cache_stats()
+    assert (stats["misses"], stats["size"]) == (2, 2)
+
+    sm.execute(plan, dl, d, du, b)
+    il.execute(plan, dl, d, du, b)
+    stats = executable_cache_stats()
+    assert (stats["misses"], stats["hits"], stats["size"]) == (2, 2, 2)
+
+
+def test_auto_layout_resolution_via_cache_key():
+    """layout="auto" shares the wide executable with an explicit
+    "interleaved" session at B >= the auto threshold, and the system-major
+    executable below it."""
+    bsz = AUTO_INTERLEAVE_MIN_BATCH
+    dl, d, du, b, _ = make_diag_dominant_system(100, seed=15, batch=(bsz,))
+    cfg = SolverConfig(m=10, num_chunks=1, dispatch="fused", backend="reference")
+    auto = TridiagSession(cfg)
+    assert auto.config.layout == "auto"
+    auto.solve_batched(dl, d, du, b)
+    assert executable_cache_stats()["misses"] == 1
+    TridiagSession(cfg.replace(layout="interleaved")).solve_batched(dl, d, du, b)
+    stats = executable_cache_stats()
+    assert (stats["misses"], stats["hits"]) == (1, 1)
+
+    dl2, d2, du2, b2, _ = make_diag_dominant_system(100, seed=16, batch=(4,))
+    auto.solve_batched(dl2, d2, du2, b2)
+    TridiagSession(cfg.replace(layout="system-major")).solve_batched(
+        dl2, d2, du2, b2
+    )
+    stats = executable_cache_stats()
+    assert (stats["misses"], stats["hits"]) == (2, 2)
+
+
+def test_resolve_layout_rules_and_validation():
+    m, n = 10, 100
+    big = (n,) * AUTO_INTERLEAVE_MIN_BATCH
+    # auto: fused + wide flat batch -> interleaved; anything else system-major.
+    assert resolve_layout("auto", big, m, fused=True) == "interleaved"
+    assert resolve_layout("auto", big[:-1], m, fused=True) == "system-major"
+    assert resolve_layout("auto", big, m, fused=False) == "system-major"
+    assert resolve_layout("auto", big, m, fused=True, lead_ndim=1) == "system-major"
+    # auto: ragged padding past the waste bound stays system-major.
+    skewed = (40 * m,) + (m,) * (AUTO_INTERLEAVE_MIN_BATCH - 1)
+    assert resolve_layout("auto", skewed, m, fused=True) == "system-major"
+    # explicit layouts pass through; interleaved rejects stacked operands.
+    assert resolve_layout("system-major", big, m, fused=True) == "system-major"
+    assert resolve_layout("interleaved", (n,), m, fused=False) == "interleaved"
+    with pytest.raises(ValueError, match="interleaved"):
+        resolve_layout("interleaved", big, m, fused=True, lead_ndim=1)
+    with pytest.raises(ValueError, match="layout"):
+        resolve_layout("warp", big, m, fused=True)
+
+    with pytest.raises(ValueError, match="layout"):
+        SolverConfig(layout="warp").validate()
+    with pytest.raises(ValueError, match="layout"):
+        SolveEngine(m=10, layout="warp")
+    with pytest.raises(ValueError, match="layout"):
+        PlanExecutor("reference", layout="warp")
+    with pytest.raises(ValueError, match="layout"):
+        FusedExecutor("reference", layout="warp")
 
 
 def test_two_thread_session_hammer_over_executable_lru():

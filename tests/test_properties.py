@@ -16,6 +16,9 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.core.autotune.linreg import LinearModel  # noqa: E402
 from repro.core.tridiag import (  # noqa: E402
+    deinterleave,
+    interleave,
+    interleave_operands,
     make_diag_dominant_system,
     partition_solve,
     solve_batched,
@@ -58,6 +61,43 @@ def test_property_linreg_recovers_noiseless_line(a, b, seed):
     y = a * x + b
     m = LinearModel.fit(x, y)
     assert np.allclose(m.predict(x), y, atol=1e-6 + 1e-6 * abs(a) * 10)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bsz=st.integers(min_value=1, max_value=12),
+    p_max=st.integers(min_value=1, max_value=10),
+    m=st.integers(min_value=2, max_value=8),
+    ragged=st.booleans(),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_interleave_roundtrip(bsz, p_max, m, ragged, dtype, seed):
+    """deinterleave ∘ interleave is the exact identity on any fused batch
+    (uniform and ragged, both dtypes), and ragged padding is identity blocks."""
+    rng = np.random.default_rng(seed)
+    if ragged:
+        ps = rng.integers(1, p_max + 1, size=bsz)
+    else:
+        ps = np.full(bsz, p_max)
+    sizes = tuple(int(q) * m for q in ps)
+    a = rng.standard_normal(sum(sizes)).astype(dtype)
+    wide = interleave(a, sizes, m)
+    assert wide.shape == (int(max(ps)), m, bsz)
+    back = np.asarray(deinterleave(wide, sizes, m))
+    assert back.dtype == dtype
+    np.testing.assert_array_equal(back, a)
+
+    # interleave_operands pads ragged tails with exact identity blocks.
+    dlw, dw, duw, bw = (
+        np.asarray(w) for w in interleave_operands(a, a, a, a, sizes, m)
+    )
+    pad = np.ones((int(max(ps)), m, bsz), dtype=bool)
+    for i, q in enumerate(ps):
+        pad[: int(q), :, i] = False
+    assert np.all(dw[pad] == 1.0)
+    for w in (dlw, duw, bw):
+        assert np.all(w[pad] == 0.0)
 
 
 @settings(max_examples=15, deadline=None)
