@@ -4,16 +4,12 @@ solves on THIS machine."""
 
 from __future__ import annotations
 
-import numpy as np
-
 from repro.configs.base import get_config, list_archs
-from repro.core.autotune.heuristic import fit_stream_heuristic
 from repro.core.autotune.overlap import (
     tune_gradient_buckets,
     tune_prefetch_chunks,
 )
 from repro.core.streams.measure import measure_dataset
-from repro.core.streams.timemodel import STREAM_CANDIDATES
 
 
 def gradient_buckets():

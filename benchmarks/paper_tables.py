@@ -9,8 +9,6 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.autotune.heuristic import (
-    GOMEZ_LUNA_TAU_MS,
-    StreamHeuristic,
     fit_stream_heuristic,
     gomez_luna_optimum,
 )

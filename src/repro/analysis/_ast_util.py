@@ -1,0 +1,80 @@
+"""Small AST helpers shared by the rule visitors (stdlib-only)."""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set, Tuple, Union
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef]
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def tail_name(node: ast.AST) -> Optional[str]:
+    """The final identifier of a Name/Attribute (``a.b.c`` -> ``c``)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def names_in(node: ast.AST) -> Set[str]:
+    """Every plain identifier referenced anywhere inside ``node``."""
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def assigned_names(target: ast.AST) -> Set[str]:
+    """Plain names bound by an assignment target (tuples unpacked)."""
+    out: Set[str] = set()
+    for n in ast.walk(target):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, (ast.Store, ast.Del)):
+            out.add(n.id)
+    return out
+
+
+def param_names(fn: Union[FunctionNode, ast.Lambda]) -> Set[str]:
+    args = fn.args
+    params = [
+        *args.posonlyargs,
+        *args.args,
+        *args.kwonlyargs,
+        *([args.vararg] if args.vararg else []),
+        *([args.kwarg] if args.kwarg else []),
+    ]
+    return {a.arg for a in params}
+
+
+def walk_functions(
+    tree: ast.AST,
+) -> Iterator[Tuple[str, FunctionNode, List[ast.AST]]]:
+    """Yield ``(qualname, node, ancestors)`` for every function definition.
+
+    ``qualname`` is dotted through enclosing classes and functions
+    (``Class.method``, ``outer.<locals>.inner`` is rendered ``outer.inner``).
+    """
+
+    def visit(node: ast.AST, prefix: str, ancestors: List[ast.AST]) -> Iterator[
+        Tuple[str, FunctionNode, List[ast.AST]]
+    ]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                yield qual, child, ancestors
+                yield from visit(child, f"{qual}.", ancestors + [child])
+            elif isinstance(child, ast.ClassDef):
+                yield from visit(
+                    child, f"{prefix}{child.name}.", ancestors + [child]
+                )
+            else:
+                yield from visit(child, prefix, ancestors + [child])
+
+    yield from visit(tree, "", [])

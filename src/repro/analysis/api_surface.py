@@ -1,0 +1,99 @@
+"""TRD005 api-surface: the public facade resolves and is documented.
+
+``repro.api`` is the one import users are told to reach for; a name in its
+``__all__`` that doesn't resolve is an ImportError waiting for the first
+``from repro.api import *``, and an undocumented public class defeats the
+point of the facade. This rule runs once per invocation (``check_repo``)
+against the *imported* module — resolution is an import-time property, not a
+lexical one — and checks that
+
+- ``__all__`` exists and every listed name resolves via ``getattr``;
+- every listed class/function carries a non-empty docstring;
+- every field of the registered config dataclass (``SolverConfig``) is
+  mentioned in that class's docstring, so the knobs stay discoverable.
+
+Tests aim it at synthetic modules through :func:`check_module`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import inspect
+from types import ModuleType
+from typing import List
+
+from repro.analysis.core import Violation
+from repro.analysis.registry import Registry
+
+CODE = "TRD005"
+NAME = "api-surface"
+SUMMARY = "repro.api __all__ must resolve, with documented public names"
+FIXIT = (
+    "export the name from the facade (or drop it from __all__), add the "
+    "missing docstring, or document the config field in the class docstring"
+)
+
+
+def _violation(path: str, message: str) -> Violation:
+    return Violation(
+        code=CODE, path=path, line=1, col=0, message=message, fixit=FIXIT
+    )
+
+
+def check_module(module: ModuleType, registry: Registry) -> List[Violation]:
+    """Audit one facade module (the injectable core of :func:`check_repo`)."""
+    path = getattr(module, "__file__", None) or f"<{module.__name__}>"
+    found: List[Violation] = []
+    exported = getattr(module, "__all__", None)
+    if exported is None:
+        return [_violation(path, f"{module.__name__} defines no __all__")]
+    for name in exported:
+        try:
+            obj = getattr(module, name)
+        except AttributeError:
+            found.append(
+                _violation(
+                    path,
+                    f"__all__ name {name!r} does not resolve on "
+                    f"{module.__name__}",
+                )
+            )
+            continue
+        if inspect.isclass(obj) or inspect.isroutine(obj):
+            doc = inspect.getdoc(obj)
+            if not doc or not doc.strip():
+                found.append(
+                    _violation(
+                        path,
+                        f"public {'class' if inspect.isclass(obj) else 'function'}"
+                        f" {name!r} has no docstring",
+                    )
+                )
+    config = getattr(module, registry.api_config_class, None)
+    if config is not None and dataclasses.is_dataclass(config):
+        doc = inspect.getdoc(config) or ""
+        for field in dataclasses.fields(config):
+            if field.name not in doc:
+                found.append(
+                    _violation(
+                        path,
+                        f"{registry.api_config_class} field {field.name!r} is "
+                        f"not mentioned in the class docstring",
+                    )
+                )
+    return found
+
+
+def check_repo(registry: Registry) -> List[Violation]:
+    """Import the registered facade and audit it."""
+    try:
+        module = importlib.import_module(registry.api_module)
+    except Exception as e:  # noqa: BLE001 — any import failure is the finding
+        return [
+            _violation(
+                f"<{registry.api_module}>",
+                f"cannot import {registry.api_module}: {e!r}",
+            )
+        ]
+    return check_module(module, registry)

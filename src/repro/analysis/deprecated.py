@@ -1,0 +1,54 @@
+"""TRD004 deprecated-frontend: legacy solver frontends stay out of src/.
+
+``ChunkedPartitionSolver`` / ``BatchedPartitionSolver`` /
+``RaggedPartitionSolver`` / ``serve.BatchedSolveService`` are
+compatibility shims kept alive for their regression tests; every new call
+path goes through ``TridiagSession`` + ``SolverConfig`` (see ``repro.api``).
+The rule flags any *construction* of a registered frontend outside the
+registry's allowed path fragments (``tests/`` by default) — references that
+merely re-export or subclass the name stay legal, which is exactly what the
+shims themselves do.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from repro.analysis import _ast_util
+from repro.analysis.core import FileContext, Violation
+from repro.analysis.registry import Registry
+
+CODE = "TRD004"
+NAME = "deprecated-frontend"
+SUMMARY = "deprecated solver frontends must not be constructed outside tests/"
+FIXIT = (
+    "construct `TridiagSession(SolverConfig(...))` instead (repro.api) — it "
+    "covers the chunked, batched, ragged and serving use cases"
+)
+
+
+def check(ctx: FileContext, registry: Registry) -> Iterator[Violation]:
+    path = ctx.path.replace("\\", "/")
+    if any(fragment in path for fragment in registry.deprecated_allowed_under):
+        return iter(())
+    found: List[Violation] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tail = _ast_util.tail_name(node.func)
+        if tail in registry.deprecated_frontends:
+            found.append(
+                Violation(
+                    code=CODE,
+                    path=ctx.path,
+                    line=node.lineno,
+                    col=node.col_offset,
+                    message=(
+                        f"constructs deprecated frontend {tail!r} outside "
+                        f"{'/'.join(registry.deprecated_allowed_under)}"
+                    ),
+                    fixit=FIXIT,
+                )
+            )
+    return iter(found)

@@ -1,0 +1,229 @@
+"""TRD002 donation-safety: no use of a device operand after it is donated.
+
+``FusedExecutor`` compiles the solve with ``donate_argnums`` on the four
+diagonals: a *device* array passed in is consumed — XLA may reuse its buffer
+for the output, so reading it afterwards is a use-after-free that jax only
+sometimes catches (and numpy never sees, because numpy operands are copied
+to device per call). The rule tracks, per function scope,
+
+- names bound to a registered donating executor (``x = FusedExecutor(...)``,
+  including ``self.<attr> = FusedExecutor(...)`` anywhere in the same class,
+  and ternaries whose either arm constructs one) — unless constructed with a
+  literal ``donate=False``;
+- names bound to *device* arrays (a registered device-producing call such as
+  ``jnp.asarray`` / ``jax.device_put`` appears in the bound expression);
+
+and flags any later lexical use of a device-bound name (including a starred
+re-donation) after it was passed in a donated operand position of
+``<executor>.execute(...)``. Rebinding the name clears it. Host (numpy)
+operands are deliberately not flagged — donation is safe for them by
+construction.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set
+
+from repro.analysis import _ast_util
+from repro.analysis.core import FileContext, Violation
+from repro.analysis.registry import DonatingCall, Registry
+
+CODE = "TRD002"
+NAME = "donation-safety"
+SUMMARY = "device arrays must not be reused after donation to a fused call"
+FIXIT = (
+    "drop the stale reference (or rebind it), pass a fresh device array, or "
+    "construct the executor with donate=False if the operands must survive"
+)
+
+
+def _constructs(node: ast.AST, spec: DonatingCall) -> Optional[ast.Call]:
+    """The donating-constructor Call contained in ``node``, if any."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            tail = _ast_util.tail_name(n.func)
+            if tail in spec.constructors:
+                return n
+    return None
+
+
+def _donation_disabled(call: ast.Call, spec: DonatingCall) -> bool:
+    for kw in call.keywords:
+        if kw.arg == spec.disable_kwarg:
+            return isinstance(kw.value, ast.Constant) and kw.value.value is False
+    return False
+
+
+def _class_executor_attrs(tree: ast.Module, spec: DonatingCall) -> Dict[str, Set[str]]:
+    """class name -> self-attrs bound to a donating executor in any method."""
+    out: Dict[str, Set[str]] = {}
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        attrs: Set[str] = set()
+        for node in ast.walk(cls):
+            if not isinstance(node, ast.Assign):
+                continue
+            ctor = _constructs(node.value, spec)
+            if ctor is None or _donation_disabled(ctor, spec):
+                continue
+            for target in node.targets:
+                if (
+                    isinstance(target, ast.Attribute)
+                    and isinstance(target.value, ast.Name)
+                    and target.value.id == "self"
+                ):
+                    attrs.add(target.attr)
+        if attrs:
+            out[cls.name] = attrs
+    return out
+
+
+class _FunctionScan:
+    """Linear (source-order) scan of one function body."""
+
+    def __init__(
+        self,
+        ctx: FileContext,
+        spec: DonatingCall,
+        device_producers: Set[str],
+        self_executor_attrs: Set[str],
+    ) -> None:
+        self.ctx = ctx
+        self.spec = spec
+        self.device_producers = device_producers
+        self.self_executor_attrs = self_executor_attrs
+        self.executors: Set[str] = set()
+        self.device: Set[str] = set()
+        self.donated: Dict[str, int] = {}  # name -> donation line
+        self.found: List[Violation] = []
+
+    # -- helpers --------------------------------------------------------------
+    def _is_device_expr(self, node: ast.AST) -> bool:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call):
+                dotted = _ast_util.dotted_name(n.func)
+                if dotted is None:
+                    continue
+                for producer in self.device_producers:
+                    if producer.endswith("."):
+                        if dotted.startswith(producer):
+                            return True
+                    elif dotted == producer or dotted.startswith(producer + "."):
+                        return True
+        return False
+
+    def _is_donating_receiver(self, func: ast.AST) -> bool:
+        if not (isinstance(func, ast.Attribute) and func.attr == self.spec.method):
+            return False
+        recv = func.value
+        if isinstance(recv, ast.Name) and recv.id in self.executors:
+            return True
+        if (
+            isinstance(recv, ast.Attribute)
+            and isinstance(recv.value, ast.Name)
+            and recv.value.id == "self"
+            and recv.attr in self.self_executor_attrs
+        ):
+            return True
+        ctor = _constructs(recv, self.spec)
+        return ctor is not None and not _donation_disabled(ctor, self.spec)
+
+    def _donated_operand_names(self, call: ast.Call) -> Set[str]:
+        names: Set[str] = set()
+        for i, arg in enumerate(call.args):
+            if isinstance(arg, ast.Starred):
+                # *ops forwards a container of operands: donating consumes
+                # its elements, so the container name itself is poisoned.
+                if isinstance(arg.value, ast.Name):
+                    names.add(arg.value.id)
+            elif i in self.spec.donated_args and isinstance(arg, ast.Name):
+                names.add(arg.id)
+        for kw in call.keywords:
+            if kw.arg in self.spec.donated_kwargs and isinstance(kw.value, ast.Name):
+                names.add(kw.value.id)
+        return names
+
+    def _flag(self, node: ast.AST, name: str) -> None:
+        self.found.append(
+            Violation(
+                code=CODE,
+                path=self.ctx.path,
+                line=getattr(node, "lineno", 1),
+                col=getattr(node, "col_offset", 0),
+                message=(
+                    f"device array {name!r} is used after being donated to a "
+                    f"{'/'.join(self.spec.constructors)}.{self.spec.method} "
+                    f"call on line {self.donated[name]} — the donated buffer "
+                    f"may already be overwritten (use-after-free)"
+                ),
+                fixit=FIXIT,
+            )
+        )
+
+    # -- traversal ------------------------------------------------------------
+    def scan_body(self, body: List[ast.stmt]) -> None:
+        for stmt in body:
+            self._scan(stmt)
+
+    def _scan(self, node: ast.AST) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return  # nested scopes run later; out of lexical order
+        if isinstance(node, ast.Assign):
+            self._scan(node.value)
+            self._bind(node.targets, node.value)
+            return
+        if isinstance(node, ast.AnnAssign) and node.value is not None:
+            self._scan(node.value)
+            self._bind([node.target], node.value)
+            return
+        if isinstance(node, ast.Call):
+            # Uses inside the call evaluate first (flags prior donations,
+            # including a second donation of the same name) ...
+            for child in ast.iter_child_nodes(node):
+                self._scan(child)
+            # ... then this call's own donation takes effect.
+            if self._is_donating_receiver(node.func):
+                for name in self._donated_operand_names(node):
+                    if name in self.device:
+                        self.donated.setdefault(name, node.lineno)
+            return
+        if isinstance(node, ast.Name):
+            if isinstance(node.ctx, ast.Load) and node.id in self.donated:
+                self._flag(node, node.id)
+            return
+        for child in ast.iter_child_nodes(node):
+            self._scan(child)
+
+    def _bind(self, targets: List[ast.AST], value: ast.AST) -> None:
+        bound: Set[str] = set()
+        for t in targets:
+            bound |= _ast_util.assigned_names(t)
+        for name in bound:
+            self.donated.pop(name, None)
+            self.device.discard(name)
+            self.executors.discard(name)
+        ctor = _constructs(value, self.spec)
+        if ctor is not None and not _donation_disabled(ctor, self.spec):
+            self.executors |= bound
+        elif self._is_device_expr(value):
+            self.device |= bound
+
+
+def check(ctx: FileContext, registry: Registry) -> Iterator[Violation]:
+    found: List[Violation] = []
+    producers = set(registry.purity.device_producers)
+    for spec in registry.donating_calls:
+        class_attrs = _class_executor_attrs(ctx.tree, spec)
+        for qual, fn, ancestors in _ast_util.walk_functions(ctx.tree):
+            cls = next(
+                (a.name for a in reversed(ancestors) if isinstance(a, ast.ClassDef)),
+                None,
+            )
+            scan = _FunctionScan(
+                ctx, spec, producers, class_attrs.get(cls or "", set())
+            )
+            scan.scan_body(fn.body)
+            found.extend(scan.found)
+    return iter(found)

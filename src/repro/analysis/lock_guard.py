@@ -1,0 +1,158 @@
+"""TRD001 lock-guard: registered shared state is only touched under its lock.
+
+The plan/executable LRUs, the serving engine's queue/stats fields and the
+session's futures table are mutated from caller threads *and* the session
+worker; every lexical access must therefore sit inside a ``with <guard>:``
+block (or in a method the registry allowlists as owner-serialised — the
+caller holds the lock around the whole call by contract). Threaded hammer
+tests sample interleavings; this rule proves the discipline lexically.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set, Union
+
+from repro.analysis import _ast_util
+from repro.analysis.core import FileContext, Violation
+from repro.analysis.registry import GuardedAttrs, GuardedGlobals, Registry
+
+CODE = "TRD001"
+NAME = "lock-guard"
+SUMMARY = "registered shared state must be accessed under its registered lock"
+FIXIT = (
+    "wrap the access in `with <guard>:` (see the registry entry), or — if "
+    "every caller already serialises it — add the enclosing method to the "
+    "registry allowlist in repro/analysis/registry.py"
+)
+
+_Entry = Union[GuardedGlobals, GuardedAttrs]
+
+
+class _Scope:
+    def __init__(self, qualname: Optional[str], guards: Set[str]) -> None:
+        self.qualname = qualname
+        self.guards = guards
+
+
+def _with_guard_names(node: Union[ast.With, ast.AsyncWith]) -> Set[str]:
+    names: Set[str] = set()
+    for item in node.items:
+        tail = _ast_util.tail_name(item.context_expr)
+        if tail is not None:
+            names.add(tail)
+    return names
+
+
+class _Visitor:
+    def __init__(
+        self,
+        ctx: FileContext,
+        globals_entries: List[GuardedGlobals],
+        attr_entries: List[GuardedAttrs],
+    ) -> None:
+        self.ctx = ctx
+        self.globals_entries = globals_entries
+        self.attr_entries = attr_entries
+        self.found: List[Violation] = []
+
+    def run(self) -> List[Violation]:
+        scope = _Scope(qualname=None, guards=set())
+        for stmt in self.ctx.tree.body:
+            self._visit(stmt, scope, class_prefix="", module_level=True)
+        return self.found
+
+    # -- traversal ------------------------------------------------------------
+    def _visit(
+        self,
+        node: ast.AST,
+        scope: _Scope,
+        class_prefix: str,
+        module_level: bool,
+    ) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # A nested def runs later, possibly without the lock: guards do
+            # not propagate into it. Decorators/defaults evaluate here.
+            for dec in node.decorator_list:
+                self._check_expr(dec, scope, module_level)
+            inner = _Scope(f"{class_prefix}{node.name}", set())
+            for stmt in node.body:
+                self._visit(stmt, inner, class_prefix="", module_level=False)
+            return
+        if isinstance(node, ast.Lambda):
+            inner = _Scope(scope.qualname, set())
+            self._visit(node.body, inner, class_prefix, module_level=False)
+            return
+        if isinstance(node, ast.ClassDef):
+            for stmt in node.body:
+                self._visit(
+                    stmt, scope, class_prefix=f"{node.name}.", module_level=module_level
+                )
+            return
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                self._check_expr(item.context_expr, scope, module_level)
+                if item.optional_vars is not None:
+                    self._check_expr(item.optional_vars, scope, module_level)
+            inner = _Scope(scope.qualname, scope.guards | _with_guard_names(node))
+            for stmt in node.body:
+                self._visit(stmt, inner, class_prefix, module_level)
+            return
+        # Generic: check this node if it is an access, then recurse.
+        self._check_node(node, scope, module_level)
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, scope, class_prefix, module_level)
+
+    def _check_expr(self, node: ast.AST, scope: _Scope, module_level: bool) -> None:
+        self._visit(node, scope, class_prefix="", module_level=module_level)
+
+    # -- matching -------------------------------------------------------------
+    def _check_node(self, node: ast.AST, scope: _Scope, module_level: bool) -> None:
+        if isinstance(node, ast.Name):
+            for entry in self.globals_entries:
+                if node.id in entry.names:
+                    self._judge(node, node.id, entry, scope, module_level)
+        elif isinstance(node, ast.Attribute):
+            for entry in self.attr_entries:
+                if node.attr in entry.attrs:
+                    self._judge(node, node.attr, entry, scope, module_level)
+
+    def _judge(
+        self,
+        node: ast.AST,
+        name: str,
+        entry: _Entry,
+        scope: _Scope,
+        module_level: bool,
+    ) -> None:
+        if module_level and scope.qualname is None:
+            return  # the definition site itself
+        if scope.guards & set(entry.guards):
+            return
+        if scope.qualname is not None and scope.qualname in entry.allow_in:
+            return
+        owner = entry.owner if isinstance(entry, GuardedAttrs) else entry.module
+        self.found.append(
+            Violation(
+                code=CODE,
+                path=self.ctx.path,
+                line=getattr(node, "lineno", 1),
+                col=getattr(node, "col_offset", 0),
+                message=(
+                    f"access to {name!r} (guarded shared state of {owner}) "
+                    f"outside `with {' / '.join(entry.guards)}:` in "
+                    f"{scope.qualname or '<module>'}"
+                ),
+                fixit=FIXIT,
+            )
+        )
+
+
+def check(ctx: FileContext, registry: Registry) -> Iterator[Violation]:
+    globals_entries = [
+        e for e in registry.guarded_globals if ctx.matches_module(e.module)
+    ]
+    attr_entries = [e for e in registry.guarded_attrs if ctx.matches_module(e.module)]
+    if not globals_entries and not attr_entries:
+        return iter(())
+    return iter(_Visitor(ctx, globals_entries, attr_entries).run())

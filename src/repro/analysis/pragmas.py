@@ -1,0 +1,47 @@
+"""``# trd: allow[...]`` pragma parsing (the checker's only waiver syntax).
+
+A pragma silences named rule codes on its own line; a pragma on a line of
+its own (comment-only line) additionally waives the line directly below, so
+multi-line statements can carry a visible waiver above them::
+
+    x = np.asarray(device_ops[0])  # trd: allow[TRD002]
+
+    # trd: allow[TRD003]
+    traced = jax.jit(host_logging_fn)
+
+Parsing is tokenizer-based (not regex-over-source), so pragma-looking text
+inside string literals never waives anything.
+"""
+
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from typing import Dict, Set
+
+_PRAGMA_RE = re.compile(r"#\s*trd:\s*allow\[([A-Z0-9,\s]+)\]")
+
+
+def parse_allow_pragmas(source: str) -> Dict[int, Set[str]]:
+    """Map line number -> set of waived rule codes for ``source``."""
+    allowed: Dict[int, Set[str]] = {}
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return allowed
+    lines = source.splitlines()
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        match = _PRAGMA_RE.search(tok.string)
+        if match is None:
+            continue
+        codes = {c.strip() for c in match.group(1).split(",") if c.strip()}
+        line = tok.start[0]
+        allowed.setdefault(line, set()).update(codes)
+        # Comment-only line: the pragma governs the statement below it.
+        text = lines[line - 1] if line - 1 < len(lines) else ""
+        if text.lstrip().startswith("#"):
+            allowed.setdefault(line + 1, set()).update(codes)
+    return allowed

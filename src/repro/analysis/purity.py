@@ -1,0 +1,255 @@
+"""TRD003 trace-purity: traced functions stay host-effect free.
+
+Anything staged into ``jax.jit`` / ``pl.pallas_call`` / ``jax.pmap`` runs
+*once* at trace time and never again: a ``print`` shows stale shapes, a
+``time.time()`` bakes the trace timestamp into the computation, Python RNG
+breaks reproducibility across retraces, and ``np.*`` on a traced value either
+fails under jit or silently forces a host round-trip. The rule finds traced
+functions through every staging idiom the repo uses —
+
+- decorators: ``@jax.jit``, ``@functools.partial(jax.jit, ...)``,
+  ``@pl.pallas_call(...)``;
+- call sites: ``jax.jit(fn, ...)``, ``jax.jit(partial(fn, ...))``,
+  ``partial(jax.jit, ...)(fn)``, ``pl.pallas_call(kernel, ...)`` where
+  ``fn``/``kernel`` is a def or lambda in the same file;
+
+— then scans the traced body (nested defs included: closures trace with it)
+for registered impure calls, ``time.*``/RNG prefixes, ``global``/``nonlocal``
+declarations, and host-array (``np.*``) calls *on traced values*. Tracedness
+is a parameter-derived taint: ``np.asarray(static_tuple)`` at trace time is
+legitimate constant folding and stays silent; only callees are scanned when
+their definition is lexically in the same file, so helpers that run at trace
+time on static arguments (index maps, grids) are not flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple, Union
+
+from repro.analysis import _ast_util
+from repro.analysis.core import FileContext, Violation
+from repro.analysis.registry import PurityConfig, Registry
+
+CODE = "TRD003"
+NAME = "trace-purity"
+SUMMARY = "jitted/Pallas-traced functions must not perform host side effects"
+FIXIT = (
+    "move the host op outside the traced function (compute it before staging "
+    "and close over the result), use the jnp/jax equivalent, or waive a "
+    "deliberate trace-time effect with `# trd: allow[TRD003]`"
+)
+
+_Traceable = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+
+def _is_tracer(node: ast.AST, cfg: PurityConfig) -> bool:
+    dotted = _ast_util.dotted_name(node)
+    return dotted is not None and dotted in cfg.tracers
+
+
+def _is_partial(node: ast.AST) -> bool:
+    return _ast_util.tail_name(node) == "partial"
+
+
+def _local_defs(tree: ast.Module) -> Dict[str, _ast_util.FunctionNode]:
+    return {fn.name: fn for _, fn, _ in _ast_util.walk_functions(tree)}
+
+
+def _resolve(
+    node: ast.AST, defs: Dict[str, _ast_util.FunctionNode]
+) -> Optional[_Traceable]:
+    """The function a staging argument refers to, if it lives in this file."""
+    if isinstance(node, ast.Lambda):
+        return node
+    if isinstance(node, ast.Name):
+        return defs.get(node.id)
+    if isinstance(node, ast.Call) and _is_partial(node.func) and node.args:
+        # jax.jit(partial(fn, ...)) — the partial's first arg is the function.
+        return _resolve(node.args[0], defs)
+    return None
+
+
+def _traced_functions(
+    tree: ast.Module, cfg: PurityConfig
+) -> List[Tuple[_Traceable, str]]:
+    """Every (function node, tracer dotted-name) staged anywhere in the file."""
+    defs = _local_defs(tree)
+    out: List[Tuple[_Traceable, str]] = []
+    seen: Set[int] = set()
+
+    def add(fn: Optional[_Traceable], tracer: str) -> None:
+        if fn is not None and id(fn) not in seen:
+            seen.add(id(fn))
+            out.append((fn, tracer))
+
+    for _, fn, _ in _ast_util.walk_functions(tree):
+        for dec in fn.decorator_list:
+            if _is_tracer(dec, cfg):
+                add(fn, _ast_util.dotted_name(dec) or "?")
+            elif isinstance(dec, ast.Call):
+                if _is_tracer(dec.func, cfg):
+                    add(fn, _ast_util.dotted_name(dec.func) or "?")
+                elif _is_partial(dec.func) and dec.args and _is_tracer(dec.args[0], cfg):
+                    # @functools.partial(jax.jit, static_argnames=...)
+                    add(fn, _ast_util.dotted_name(dec.args[0]) or "?")
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _is_tracer(node.func, cfg) and node.args:
+            add(_resolve(node.args[0], defs), _ast_util.dotted_name(node.func) or "?")
+        elif (
+            # partial(jax.jit, ...)(fn)
+            isinstance(node.func, ast.Call)
+            and _is_partial(node.func.func)
+            and node.func.args
+            and _is_tracer(node.func.args[0], cfg)
+            and node.args
+        ):
+            add(
+                _resolve(node.args[0], defs),
+                _ast_util.dotted_name(node.func.args[0]) or "?",
+            )
+    return out
+
+
+class _BodyScan:
+    """In-order scan of a traced body with parameter-derived taint."""
+
+    def __init__(self, ctx: FileContext, cfg: PurityConfig, fn_label: str) -> None:
+        self.ctx = ctx
+        self.cfg = cfg
+        self.fn_label = fn_label
+        self.taint: Set[str] = set()
+        self.found: List[Violation] = []
+
+    def _flag(self, node: ast.AST, what: str) -> None:
+        self.found.append(
+            Violation(
+                code=CODE,
+                path=self.ctx.path,
+                line=getattr(node, "lineno", 1),
+                col=getattr(node, "col_offset", 0),
+                message=f"traced function {self.fn_label!r} {what}",
+                fixit=FIXIT,
+            )
+        )
+
+    def _tainted(self, node: ast.AST) -> bool:
+        return bool(_ast_util.names_in(node) & self.taint)
+
+    def _check_call(self, node: ast.Call) -> None:
+        dotted = _ast_util.dotted_name(node.func)
+        if dotted is None:
+            return
+        if dotted in self.cfg.impure_calls:
+            self._flag(node, f"calls host builtin {dotted}()")
+            return
+        for prefix in self.cfg.impure_prefixes:
+            if dotted.startswith(prefix):
+                self._flag(
+                    node,
+                    f"calls {dotted}() — a trace-time host effect that is "
+                    f"baked into the compiled computation",
+                )
+                return
+        for prefix in self.cfg.host_array_prefixes:
+            if dotted.startswith(prefix):
+                operands = [*node.args, *[kw.value for kw in node.keywords]]
+                if any(self._tainted(a) for a in operands):
+                    self._flag(
+                        node,
+                        f"calls {dotted}() on a traced value — host numpy "
+                        f"cannot consume tracers (fails under jit or forces "
+                        f"a device-to-host transfer)",
+                    )
+                return
+
+    def scan(self, fn: _Traceable) -> List[Violation]:
+        self.taint |= _ast_util.param_names(fn)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            self._scan(stmt)
+        return self.found
+
+    def _scan(self, node: ast.AST) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            # Nested defs/lambdas trace with the enclosing function.
+            self.taint |= _ast_util.param_names(node)
+            body = node.body if isinstance(node.body, list) else [node.body]
+            for stmt in body:
+                self._scan(stmt)
+            return
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            kind = "global" if isinstance(node, ast.Global) else "nonlocal"
+            self._flag(
+                node,
+                f"declares `{kind} {', '.join(node.names)}` — mutating outer "
+                f"state from a traced body only happens at trace time",
+            )
+            return
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            value = node.value
+            if value is not None:
+                self._scan(value)
+                targets = (
+                    node.targets if isinstance(node, ast.Assign) else [node.target]
+                )
+                if self._tainted(value):
+                    for t in targets:
+                        self.taint |= _ast_util.assigned_names(t)
+            return
+        if isinstance(node, ast.For):
+            self._scan(node.iter)
+            if self._tainted(node.iter):
+                self.taint |= _ast_util.assigned_names(node.target)
+            for stmt in [*node.body, *node.orelse]:
+                self._scan(stmt)
+            return
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                self._scan(item.context_expr)
+                if item.optional_vars is not None and self._tainted(
+                    item.context_expr
+                ):
+                    self.taint |= _ast_util.assigned_names(item.optional_vars)
+            for stmt in node.body:
+                self._scan(stmt)
+            return
+        if isinstance(
+            node, (ast.ListComp, ast.SetComp, ast.GeneratorExp, ast.DictComp)
+        ):
+            for gen in node.generators:
+                self._scan(gen.iter)
+                if self._tainted(gen.iter):
+                    self.taint |= _ast_util.assigned_names(gen.target)
+                for cond in gen.ifs:
+                    self._scan(cond)
+            if isinstance(node, ast.DictComp):
+                self._scan(node.key)
+                self._scan(node.value)
+            else:
+                self._scan(node.elt)
+            return
+        if isinstance(node, ast.Call):
+            self._check_call(node)
+        for child in ast.iter_child_nodes(node):
+            self._scan(child)
+
+
+def check(ctx: FileContext, registry: Registry) -> Iterator[Violation]:
+    cfg = registry.purity
+    found: List[Violation] = []
+    # A nested def can be reached twice (scanned inside its parent and staged
+    # in its own right) — position-dedupe so each defect reports once.
+    seen: Set[Tuple[int, int]] = set()
+    for fn, tracer in _traced_functions(ctx.tree, cfg):
+        label = getattr(fn, "name", "<lambda>")
+        scan = _BodyScan(ctx, cfg, f"{label} (traced via {tracer})")
+        for v in scan.scan(fn):
+            key = (v.line, v.col)
+            if key not in seen:
+                seen.add(key)
+                found.append(v)
+    return iter(found)

@@ -1,0 +1,204 @@
+"""Declarative configuration of the repo's checked invariants.
+
+Rules never hard-code repo names in their visitors; everything a rule flags
+is driven by the entries here, so growing the codebase (a new cache, a new
+lock, a new donating entry point) means *registering* the invariant, not
+editing checker logic. Tests construct a custom :class:`Registry` to aim the
+rules at fixture modules.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class GuardedGlobals:
+    """Module-level shared state that must be touched under a lock (TRD001).
+
+    ``module`` is a path suffix (``/``-separated) selecting the file the
+    entry applies to; ``names`` are the module-global identifiers; ``guards``
+    the lock names whose ``with`` block satisfies the rule. Module-level
+    statements (the definitions themselves) are exempt; ``allow_in`` lists
+    additional fully-qualified functions (``Class.method`` or bare function
+    names) that may touch the state unguarded.
+    """
+
+    module: str
+    names: Tuple[str, ...]
+    guards: Tuple[str, ...]
+    allow_in: Tuple[str, ...] = ()
+
+
+@dataclass(frozen=True)
+class GuardedAttrs:
+    """Instance attributes that must be touched under a lock (TRD001).
+
+    Matches any ``<expr>.<attr>`` access in ``module`` where ``attr`` is in
+    ``attrs`` — attribute chains included (``self._engine._queue`` matches
+    ``_queue``). ``guards`` are lock *attribute or global* names; ``owner``
+    names the class the state belongs to (documentation + allowlist
+    prefix). ``allow_in`` lists methods that are owner-serialised by
+    contract (every caller holds the owner's lock around the whole call).
+    """
+
+    module: str
+    owner: str
+    attrs: Tuple[str, ...]
+    guards: Tuple[str, ...]
+    allow_in: Tuple[str, ...] = ()
+
+
+@dataclass(frozen=True)
+class DonatingCall:
+    """A call site whose operands are donated to XLA (TRD002).
+
+    ``constructors`` name the executor classes whose instances donate;
+    ``method`` is the donating method; ``donated_args`` are the 0-based
+    positions of the donated operands in the *method* call (keywords in
+    ``donated_kwargs``); ``disable_kwarg`` names the constructor keyword
+    that, when passed a ``False`` literal, turns donation off.
+    """
+
+    constructors: Tuple[str, ...] = ("FusedExecutor",)
+    method: str = "execute"
+    donated_args: Tuple[int, ...] = (1, 2, 3, 4)
+    donated_kwargs: Tuple[str, ...] = ("dl", "d", "du", "b")
+    disable_kwarg: str = "donate"
+
+
+@dataclass(frozen=True)
+class PurityConfig:
+    """What counts as tracing, and what counts as impure (TRD003).
+
+    ``tracers`` are dotted names that trace their function argument (or the
+    function they decorate); ``impure_calls`` are flagged unconditionally
+    inside a traced body; ``impure_prefixes`` likewise (dotted-prefix match,
+    e.g. ``time.`` flags ``time.sleep``); ``host_array_prefixes`` are flagged
+    only when the call's arguments involve a traced value (``np.asarray`` on
+    a static tuple is legitimate trace-time constant folding, ``np.asarray``
+    on a traced operand silently forces a host transfer or fails under jit);
+    ``device_producers`` feed TRD002's device-array taint.
+    """
+
+    tracers: Tuple[str, ...] = (
+        "jax.jit",
+        "jit",
+        "pl.pallas_call",
+        "pallas_call",
+        "jax.pmap",
+    )
+    impure_calls: Tuple[str, ...] = ("print", "input", "breakpoint", "open")
+    impure_prefixes: Tuple[str, ...] = (
+        "time.",
+        "random.",
+        "np.random.",
+        "numpy.random.",
+    )
+    host_array_prefixes: Tuple[str, ...] = ("np.", "numpy.")
+    device_producers: Tuple[str, ...] = (
+        "jnp.",
+        "jax.numpy.",
+        "jax.device_put",
+        "jax.random.",
+    )
+
+
+@dataclass(frozen=True)
+class Registry:
+    """Everything the rules know about this repo, in one declarative object."""
+
+    guarded_globals: Tuple[GuardedGlobals, ...] = ()
+    guarded_attrs: Tuple[GuardedAttrs, ...] = ()
+    donating_calls: Tuple[DonatingCall, ...] = (DonatingCall(),)
+    purity: PurityConfig = field(default_factory=PurityConfig)
+    #: Deprecated frontends: constructing these outside ``tests/`` is TRD004.
+    deprecated_frontends: Tuple[str, ...] = (
+        "ChunkedPartitionSolver",
+        "BatchedPartitionSolver",
+        "RaggedPartitionSolver",
+        "BatchedSolveService",
+    )
+    #: Path fragments under which TRD004 does not apply.
+    deprecated_allowed_under: Tuple[str, ...] = ("tests/",)
+    #: The public surface TRD005 audits (module, config class in its __all__).
+    api_module: str = "repro.api"
+    api_config_class: str = "SolverConfig"
+
+
+#: The engine's queue-side state is owner-serialised: ``TridiagSession``
+#: holds ``_cv`` around every engine call, and the legacy shim is documented
+#: single-threaded — so the engine's own methods are the allowlist, and the
+#: rule's job is catching *outside* touches (a session or test reaching into
+#: ``engine._queue`` without the lock).
+_ENGINE_METHODS = tuple(
+    f"SolveEngine.{name}"
+    for name in (
+        "__init__",
+        "submit",
+        "pending",
+        "cancel",
+        "shed_expired",
+        "take_due_group",
+        "_admit",
+        "_take_group",
+        "poll",
+        "flush",
+        "_drain",
+        "_dispatch",
+        "_oldest_submit",
+        "seconds_to_deadline",
+        "seconds_to_next_event",
+        "_deadline_expired",
+        "stats_snapshot",
+    )
+)
+
+_PLAN_PY = "repro/core/tridiag/plan.py"
+_API_PY = "repro/core/tridiag/api.py"
+
+DEFAULT_REGISTRY = Registry(
+    guarded_globals=(
+        GuardedGlobals(
+            module=_PLAN_PY,
+            names=(
+                "_PLAN_CACHE",
+                "_PLAN_STATS",
+                "_PLAN_CACHE_CAPACITY",
+                "_EXEC_CACHE",
+                "_EXEC_STATS",
+                "_EXEC_CACHE_CAPACITY",
+                "_STAGE1_CACHE",
+                "_STAGE3_CACHE",
+                "_STAGE3_GHOST_CACHE",
+                "_WIDE_STAGE1_CACHE",
+                "_WIDE_STAGE3_CACHE",
+            ),
+            guards=("_CACHE_LOCK",),
+        ),
+    ),
+    guarded_attrs=(
+        GuardedAttrs(
+            module=_API_PY,
+            owner="SolveEngine",
+            attrs=("stats",),
+            guards=("_stats_lock",),
+            allow_in=("SolveEngine.__init__",),
+        ),
+        GuardedAttrs(
+            module=_API_PY,
+            owner="SolveEngine",
+            attrs=("_queue", "_results", "_seq"),
+            guards=("_cv",),
+            allow_in=_ENGINE_METHODS,
+        ),
+        GuardedAttrs(
+            module=_API_PY,
+            owner="TridiagSession",
+            attrs=("_futures", "_worker", "_closed", "_worker_error"),
+            guards=("_cv",),
+            allow_in=("TridiagSession.__init__",),
+        ),
+    ),
+)

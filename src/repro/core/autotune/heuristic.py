@@ -166,7 +166,8 @@ def fit_stream_heuristic(
     # ---- Eq. 7: T_overhead ~ (size, num_str), small/big regimes ----
     # The size feature is the effective in-flight element count size·batch
     # (batch defaults to 1 on the paper's single-system campaign).
-    eff = lambda r: r["size"] * r.get("batch", 1)
+    def eff(r):
+        return r["size"] * r.get("batch", 1)
 
     def fit_regime(rows, form, p0, tag):
         if not rows:

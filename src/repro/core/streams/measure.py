@@ -107,9 +107,10 @@ def measure_dataset(
     rows: List[Dict] = []
     for n in sizes:
         dl, d, du, b, _ = make_diag_dominant_system(n, seed=seed, dtype=dtype)
-        run = lambda k: TridiagSession(base.replace(num_chunks=k)).solve_timed(
-            dl, d, du, b
-        )[1]
+        def run(k, dl=dl, d=d, du=du, b=b):
+            return TridiagSession(base.replace(num_chunks=k)).solve_timed(
+                dl, d, du, b
+            )[1]
         _measure_cell(
             rows, run, size=n, batch=None, candidates=candidates, reps=reps
         )
@@ -139,9 +140,10 @@ def measure_batched_dataset(
             dl, d, du, b, _ = make_diag_dominant_system(
                 n, seed=seed, batch=(batch,), dtype=dtype
             )
-            run = lambda k: TridiagSession(
-                base.replace(num_chunks=k)
-            ).solve_batched_timed(dl, d, du, b)[1]
+            def run(k, dl=dl, d=d, du=du, b=b):
+                return TridiagSession(
+                    base.replace(num_chunks=k)
+                ).solve_batched_timed(dl, d, du, b)[1]
             _measure_cell(
                 rows, run, size=n, batch=batch, candidates=candidates, reps=reps
             )
@@ -173,9 +175,10 @@ def measure_ragged_dataset(
             make_diag_dominant_system(n, seed=seed + i, dtype=dtype)[:4]
             for i, n in enumerate(mix)
         ]
-        run = lambda k: TridiagSession(base.replace(num_chunks=k)).solve_many_timed(
-            systems
-        )[1]
+        def run(k, systems=systems):
+            return TridiagSession(
+                base.replace(num_chunks=k)
+            ).solve_many_timed(systems)[1]
         _measure_cell(
             rows, run, size=sum(mix), batch=None, candidates=candidates,
             reps=reps, mix=mix,

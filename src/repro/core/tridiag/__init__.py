@@ -91,6 +91,19 @@ one serial ``Σ Pᵢ`` scan; ragged batches pad to ``P_max`` blocks with
 donation still applies to the caller-visible operands). ``"auto"`` (default)
 interleaves wide flat fused batches (B ≥ ``layout.AUTO_INTERLEAVE_MIN_BATCH``
 systems, bounded padding waste) and stays system-major otherwise.
+
+Checked invariants
+------------------
+This package's concurrency and donation contracts are machine-checked:
+``repro.analysis`` (CI's ``invariants`` job, ``python -m repro.analysis
+check src tests``) lexically proves that every access to the plan/executable
+LRUs and the engine/session queue state sits under its registered lock
+(TRD001), that no device array is reused after being donated to
+``FusedExecutor.execute`` (TRD002), and that jitted/Pallas-staged bodies stay
+host-effect free (TRD003). Adding a cache, lock, or donating entry point
+here means registering it in ``repro/analysis/registry.py``; ``api``,
+``plan``, ``layout`` and ``ragged`` are additionally held to
+``disallow_untyped_defs`` under mypy (see ``mypy.ini``).
 """
 
 from repro.core.tridiag.thomas import thomas, thomas_factor, thomas_solve_factored

@@ -84,7 +84,7 @@ import math
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -205,7 +205,7 @@ class AdmissionPolicy:
     max_wait_ms: float = math.inf
     allow_ragged: bool = True
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if self.max_wait_ms < 0:
@@ -362,7 +362,7 @@ class SolverConfig:
         return self
 
     # -- derived views -------------------------------------------------------
-    def replace(self, **changes) -> "SolverConfig":
+    def replace(self, **changes: Any) -> "SolverConfig":
         """A copy with ``changes`` applied (e.g. ``cfg.replace(num_chunks=k)``
         inside a chunk sweep)."""
         return dataclasses.replace(self, **changes)
@@ -389,7 +389,7 @@ class SolveFuture:
     admitted — or already resolved — it returns False and the result stands.
     """
 
-    def __init__(self, rid: int):
+    def __init__(self, rid: int) -> None:
         self.rid = rid
         self._event = threading.Event()
         self._value: Optional[np.ndarray] = None
@@ -420,6 +420,7 @@ class SolveFuture:
             )
         if self._error is not None:
             raise self._error
+        assert self._value is not None  # resolved without error => has a value
         return self._value
 
     def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
@@ -427,7 +428,11 @@ class SolveFuture:
             raise TimeoutError(f"request {self.rid} not resolved within {timeout}s")
         return self._error
 
-    def _resolve(self, value=None, error: Optional[BaseException] = None) -> None:
+    def _resolve(
+        self,
+        value: Optional[np.ndarray] = None,
+        error: Optional[BaseException] = None,
+    ) -> None:
         self._value = value
         self._error = error
         self._event.set()
@@ -503,21 +508,21 @@ class SolveEngine:
         self,
         *,
         m: int = 10,
-        heuristic=None,
+        heuristic: Any = None,
         policy: Optional[ChunkPolicy] = None,
         default_chunks: int = 1,
         admission: Optional[AdmissionPolicy] = None,
         eager: bool = False,
         clock: Callable[[], float] = time.perf_counter,
         backend: BackendLike = None,
-        dtype=None,
+        dtype: Any = None,
         dispatch: str = "auto",
         layout: str = "auto",
         max_queue: Optional[int] = None,
         on_result: Optional[Callable[[int, np.ndarray], None]] = None,
         on_error: Optional[Callable[[int, BaseException], None]] = None,
-        executor=None,
-    ):
+        executor: Any = None,
+    ) -> None:
         if dispatch not in DISPATCH_MODES:
             raise ValueError(
                 f"dispatch={dispatch!r}: must be one of {sorted(DISPATCH_MODES)}"
@@ -901,7 +906,8 @@ class SolveEngine:
 
     @property
     def systems_per_sec(self) -> float:
-        return self.stats["systems"] / max(self.stats["wall_s"], 1e-12)
+        with self._stats_lock:
+            return self.stats["systems"] / max(self.stats["wall_s"], 1e-12)
 
 
 # ------------------------------------------------------------------ session --
@@ -924,14 +930,16 @@ class TridiagSession:
     closes on exit.
     """
 
-    def __init__(self, config: Optional[SolverConfig] = None):
+    def __init__(self, config: Optional[SolverConfig] = None) -> None:
         self.config = (SolverConfig() if config is None else config).validate()
         self.backend = resolve_backend(self.config.backend)
         self._executor = PlanExecutor(backend=self.backend, layout=self.config.layout)
         self._fused = FusedExecutor(backend=self.backend, layout=self.config.layout)
         if self.config.plan_cache_capacity is not None:
             set_plan_cache_capacity(self.config.plan_cache_capacity)
-        self._cv = threading.Condition()
+        # RLock-backed so _resolve_future can take it from paths that
+        # already hold it (the serve loop's failure drain).
+        self._cv = threading.Condition(threading.RLock())
         self._futures: Dict[int, SolveFuture] = {}
         self._worker: Optional[threading.Thread] = None
         self._closed = False
@@ -958,12 +966,12 @@ class TridiagSession:
             return build_plan(sizes, self.config.m, policy=self.config.policy)
         return build_plan(sizes, self.config.m, num_chunks=self.config.num_chunks or 1)
 
-    def _cast(self, *arrays):
+    def _cast(self, *arrays: Any) -> Tuple[Any, ...]:
         if self.config.dtype is None:
             return arrays
         return tuple(np.asarray(a, dtype=self.config.dtype) for a in arrays)
 
-    def _cast_out(self, x):
+    def _cast_out(self, x: Any) -> np.ndarray:
         # The config names the precision once — outputs honour it too (the
         # reference stages may promote fp32 coefficients against the fp64
         # host reduced solve).
@@ -971,7 +979,7 @@ class TridiagSession:
             return x
         return np.asarray(x, dtype=self.config.dtype)
 
-    def _pick_executor(self, timed: bool):
+    def _pick_executor(self, timed: bool) -> "PlanExecutor | FusedExecutor":
         """``dispatch`` routing: "staged"/"fused" are unconditional; "auto"
         fuses plain solves but keeps the ``*_timed`` verbs on the staged path,
         whose host round-trips are what make the per-phase ``ChunkTiming``
@@ -982,7 +990,7 @@ class TridiagSession:
         return self._executor
 
     # -- synchronous verbs ---------------------------------------------------
-    def solve(self, dl, d, du, b) -> np.ndarray:
+    def solve(self, dl: Any, d: Any, du: Any, b: Any) -> np.ndarray:
         """Solve one system (1-D diagonals; leading batch dims pass through).
 
         Under ``dispatch="auto"``/``"fused"`` this is one compiled XLA
@@ -992,10 +1000,14 @@ class TridiagSession:
         """
         return self._solve(dl, d, du, b, timed=False)[0]
 
-    def solve_timed(self, dl, d, du, b) -> Tuple[np.ndarray, ChunkTiming]:
+    def solve_timed(
+        self, dl: Any, d: Any, du: Any, b: Any
+    ) -> Tuple[np.ndarray, ChunkTiming]:
         return self._solve(dl, d, du, b, timed=True)
 
-    def _solve(self, dl, d, du, b, *, timed: bool):
+    def _solve(
+        self, dl: Any, d: Any, du: Any, b: Any, *, timed: bool
+    ) -> Tuple[np.ndarray, ChunkTiming]:
         dl, d, du, b = self._cast(dl, d, du, b)
         n = int(np.shape(d)[-1])
         x, timing = self._pick_executor(timed).execute(
@@ -1003,14 +1015,18 @@ class TridiagSession:
         )
         return self._cast_out(x), timing
 
-    def solve_batched(self, dl, d, du, b) -> np.ndarray:
+    def solve_batched(self, dl: Any, d: Any, du: Any, b: Any) -> np.ndarray:
         """Solve B same-size systems given as (B, n) operands."""
         return self._solve_batched(dl, d, du, b, timed=False)[0]
 
-    def solve_batched_timed(self, dl, d, du, b) -> Tuple[np.ndarray, ChunkTiming]:
+    def solve_batched_timed(
+        self, dl: Any, d: Any, du: Any, b: Any
+    ) -> Tuple[np.ndarray, ChunkTiming]:
         return self._solve_batched(dl, d, du, b, timed=True)
 
-    def _solve_batched(self, dl, d, du, b, *, timed: bool):
+    def _solve_batched(
+        self, dl: Any, d: Any, du: Any, b: Any, *, timed: bool
+    ) -> Tuple[np.ndarray, ChunkTiming]:
         dl, d, du, b = self._cast(dl, d, du, b)
         d_arr = np.asarray(d)
         if d_arr.ndim != 2:
@@ -1035,7 +1051,9 @@ class TridiagSession:
     ) -> Tuple[List[np.ndarray], ChunkTiming]:
         return self._solve_many(systems, timed=True)
 
-    def _solve_many(self, systems: Sequence[System], *, timed: bool):
+    def _solve_many(
+        self, systems: Sequence[System], *, timed: bool
+    ) -> Tuple[List[np.ndarray], ChunkTiming]:
         if self.config.dtype is not None:
             systems = [self._cast(*s) for s in systems]
         dl, d, du, b, sizes = fuse_ragged(systems)
@@ -1124,8 +1142,16 @@ class TridiagSession:
         )
         return True
 
-    def _resolve_future(self, rid: int, value=None, error=None) -> None:
-        fut = self._futures.pop(rid, None)
+    def _resolve_future(
+        self,
+        rid: int,
+        value: Optional[np.ndarray] = None,
+        error: Optional[BaseException] = None,
+    ) -> None:
+        # Called both with and without _cv held (the serve loop's failure
+        # path resolves under the lock) — _cv wraps an RLock so this nests.
+        with self._cv:
+            fut = self._futures.pop(rid, None)
         if fut is not None:
             fut._resolve(value, error)
 
@@ -1234,15 +1260,17 @@ class TridiagSession:
     def __enter__(self) -> "TridiagSession":
         return self
 
-    def __exit__(self, exc_type, exc, tb) -> None:
+    def __exit__(self, exc_type: object, exc: object, tb: object) -> None:
         self.close()
 
     def __repr__(self) -> str:
-        state = "closed" if self._closed else "open"
+        with self._cv:
+            state = "closed" if self._closed else "open"
+            pending = self._engine.pending()
         return (
             f"TridiagSession(m={self.config.m}, backend={self.backend.name!r}, "
             f"dispatch={self.config.dispatch!r}, {state}, "
-            f"pending={self._engine.pending()})"
+            f"pending={pending})"
         )
 
 

@@ -39,7 +39,7 @@ systems, and only when ragged padding would not blow the footprint up past
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -113,7 +113,9 @@ def _check_sizes(sizes: Sequence[int], m: int) -> Tuple[int, ...]:
 
 
 @functools.lru_cache(maxsize=512)
-def _index_maps(sizes: Tuple[int, ...], m: int):
+def _index_maps(
+    sizes: Tuple[int, ...], m: int
+) -> Tuple[np.ndarray, np.ndarray, bool]:
     """Static gather maps for one fused batch shape.
 
     Returns ``(fwd, inv, uniform)``: ``fwd`` is (P_max, m, B) int32 into the
@@ -206,10 +208,10 @@ def partition_stage1_wide(
     transposes (XLA folds these into the surrounding gathers)."""
     p, _, bsz = dw.shape
 
-    def to_sys(a):
+    def to_sys(a: Any) -> Any:
         return a.transpose(2, 0, 1).reshape(bsz, p * m)
 
-    def spike(a):  # (B, P, m-1) -> (P, m-1, B)
+    def spike(a: Any) -> Any:  # (B, P, m-1) -> (P, m-1, B)
         return a.transpose(1, 2, 0)
 
     c = partition_stage1(to_sys(dlw), to_sys(dw), to_sys(duw), to_sys(bw), m)

@@ -93,7 +93,7 @@ import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -227,7 +227,7 @@ class PallasBackend(StageBackend):
             partition_stage1_pallas_batched,
         )
 
-        def stage1(dl, d, du, b):
+        def stage1(dl: Any, d: Any, du: Any, b: Any) -> Any:
             ndim = jnp.asarray(d).ndim
             kw = dict(m=m, block_p=self.block_p, interpret=self.interpret)
             if ndim == 1:
@@ -247,7 +247,7 @@ class PallasBackend(StageBackend):
             partition_stage3_pallas_batched,
         )
 
-        def stage3(coeffs, s):
+        def stage3(coeffs: Any, s: Any) -> Any:
             # The host reduced solve is fp64 (oracle of record); the jnp
             # reference stage promotes silently, but kernel refs are typed —
             # back-substitution runs in the spikes' precision.
@@ -268,7 +268,7 @@ class PallasBackend(StageBackend):
     def make_reduced_solve(self) -> Callable:
         from repro.kernels.thomas.ops import thomas_pallas
 
-        def reduced_solve(red_dl, red_d, red_du, red_b):
+        def reduced_solve(red_dl: Any, red_d: Any, red_du: Any, red_b: Any) -> Any:
             # The kernel's grid is (batch,)-tiled: 1-D and 2-D reduced
             # systems route through it; exotic extra leading dims fall back
             # to the scan (they only arise on the reference stages anyway).
@@ -294,7 +294,7 @@ class PallasBackend(StageBackend):
     def make_wide_stage3(self) -> Callable:
         from repro.kernels.partition_stage3.ops import partition_stage3_pallas_wide
 
-        def wide_stage3(coeffs, s):
+        def wide_stage3(coeffs: Any, s: Any) -> Any:
             # Same precision contract as make_stage3: kernel refs are typed,
             # so a host-fp64 interface vector is cast to the spikes' dtype.
             s = jnp.asarray(s, dtype=jnp.asarray(coeffs.y).dtype)
@@ -451,7 +451,7 @@ def jitted_stage3_ghost(backend: BackendLike = None) -> Callable:
 
 
 # ------------------------------------------------------------ chunk policies --
-def price_chunks(heuristic, sizes: Sizes, *, fp32: bool = False) -> int:
+def price_chunks(heuristic: Any, sizes: Sizes, *, fp32: bool = False) -> int:
     """THE chunk-pricing rule: one heuristic call for every entry point.
 
     `HeuristicChunkPolicy` and `serve.solve.BatchedSolveService` both route
@@ -756,7 +756,9 @@ class PlanExecutor:
     the wide grid itself is the parallel axis.
     """
 
-    def __init__(self, backend: BackendLike = None, *, layout: str = "auto"):
+    def __init__(
+        self, backend: BackendLike = None, *, layout: str = "auto"
+    ) -> None:
         self.backend = resolve_backend(backend)
         if layout not in layout_mod.LAYOUTS:
             raise ValueError(
@@ -784,7 +786,7 @@ class PlanExecutor:
         if layout == "interleaved":
             return self._execute_interleaved(plan, dl, d, du, b)
 
-        def row(a, lo, hi):
+        def row(a: Any, lo: int, hi: int) -> jax.Array:
             # Fast path: operands already on device slice lazily — no host
             # copy, no device_put (the PR-3 ROADMAP follow-up's staged half).
             if isinstance(a, jax.Array):
@@ -854,7 +856,7 @@ class PlanExecutor:
         return x, timing
 
     def _execute_interleaved(
-        self, plan: SolvePlan, dl, d, du, b
+        self, plan: SolvePlan, dl: Any, d: Any, du: Any, b: Any
     ) -> Tuple[np.ndarray, ChunkTiming]:
         """Whole-batch staged solve on the wide (lane-major) layout.
 
@@ -895,7 +897,9 @@ class PlanExecutor:
         return x, timing
 
 
-def _stage3_with_ghost(stage3_fn, coeffs, s_chunk, s_left_edge):
+def _stage3_with_ghost(
+    stage3_fn: Callable, coeffs: Any, s_chunk: Any, s_left_edge: Any
+) -> Any:
     """Run stage 3 on a chunk whose left neighbour lives in another chunk.
 
     ``partition_stage3`` derives s_{p-1} by shifting within the chunk, so the
@@ -929,7 +933,7 @@ def _stage3_with_ghost(stage3_fn, coeffs, s_chunk, s_left_edge):
 _COMPILE_LOCK = threading.Lock()
 
 
-def _canonical_operand(a):
+def _canonical_operand(a: Any) -> Any:
     """Host operands in jax's canonical dtype (device arrays already are)."""
     if isinstance(a, np.ndarray):
         cd = jax.dtypes.canonicalize_dtype(a.dtype)
@@ -993,7 +997,7 @@ def _fused_callable(
         wide_stage1, wide_stage3 = jitted_wide_stages(m, backend)
         wide_reduced = backend.make_wide_reduced_solve()
 
-        def fused(dl, d, du, b):
+        def fused(dl: Any, d: Any, du: Any, b: Any) -> Any:
             ops = layout_mod.interleave_operands(dl, d, du, b, sizes, m)
             c = wide_stage1(*ops)
             s = wide_reduced(c.red_dl, c.red_d, c.red_du, c.red_b)
@@ -1005,10 +1009,10 @@ def _fused_callable(
         stage3_ghost = jitted_stage3_ghost(backend)
         reduced_solve = backend.make_reduced_solve()
 
-        def fused(dl, d, du, b):
+        def fused(dl: Any, d: Any, du: Any, b: Any) -> Any:
             coeffs = []
             for (lo, hi), (_, hi_halo) in zip(plan.chunk_bounds, plan.halo_bounds):
-                def sl(a, lo=lo, hi_halo=hi_halo):
+                def sl(a: Any, lo: int = lo, hi_halo: int = hi_halo) -> Any:
                     return jax.lax.slice_in_dim(a, lo * m, hi_halo * m, axis=-1)
 
                 coeffs.append(
@@ -1082,7 +1086,7 @@ class FusedExecutor:
         *,
         donate: bool = True,
         layout: str = "auto",
-    ):
+    ) -> None:
         self.backend = resolve_backend(backend)
         self.donate = donate
         if layout not in layout_mod.LAYOUTS:
@@ -1136,10 +1140,10 @@ class FusedExecutor:
     def execute(
         self,
         plan: SolvePlan,
-        dl,
-        d,
-        du,
-        b,
+        dl: Any,
+        d: Any,
+        du: Any,
+        b: Any,
     ) -> Tuple[np.ndarray, ChunkTiming]:
         ops = [
             a if isinstance(a, (np.ndarray, jax.Array)) else np.asarray(a)

@@ -46,16 +46,20 @@ API example (the facade is the front door; ``RaggedPartitionSolver`` and
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.tridiag.plan import (
+    BackendLike,
     ChunkPolicy,
     ChunkTiming,
     SolvePlan,
     effective_size,
 )
+
+if TYPE_CHECKING:  # circular at runtime: api builds on this module
+    from repro.core.tridiag.api import TridiagSession
 
 __all__ = [
     "RaggedPartitionSolver",
@@ -124,7 +128,12 @@ def split_ragged(x: np.ndarray, sizes: Sequence[int]) -> List[np.ndarray]:
     return [x[..., lo:hi] for lo, hi in zip(offsets[:-1], offsets[1:])]
 
 
-def _session_for(m, num_chunks, policy, backend):
+def _session_for(
+    m: int,
+    num_chunks: int,
+    policy: "Optional[ChunkPolicy]",
+    backend: BackendLike,
+) -> "TridiagSession":
     """Equivalent TridiagSession config for the legacy ctor arguments."""
     from repro.core.tridiag.api import SolverConfig, TridiagSession
 
@@ -159,8 +168,8 @@ class RaggedPartitionSolver:
         num_chunks: int = 1,
         *,
         policy: Optional[ChunkPolicy] = None,
-        backend=None,
-    ):
+        backend: BackendLike = None,
+    ) -> None:
         import warnings
 
         warnings.warn(
@@ -196,7 +205,7 @@ def solve_ragged(
     m: int = 10,
     num_chunks: int = 1,
     policy: Optional[ChunkPolicy] = None,
-    backend=None,
+    backend: BackendLike = None,
 ) -> List[np.ndarray]:
     """One-shot ragged fused solve; returns the per-system solutions.
 

@@ -163,7 +163,7 @@ def test_fused_donation_consumes_device_arrays_numpy_safe():
     x, _ = ex.execute(plan, *device_ops)
     assert _rel_err(x, ref) < 1e-11
     with pytest.raises(RuntimeError):
-        np.asarray(device_ops[0])
+        np.asarray(device_ops[0])  # trd: allow[TRD002] — asserts the deletion
 
     # donate=False keeps device operands alive (separate executable).
     keep = FusedExecutor("reference", donate=False)
