@@ -1,0 +1,38 @@
+"""Heuristic-provenance notes for the benchmark run (the ``--json`` meta).
+
+With the closed-loop autotune subsystem (:mod:`repro.telemetry`) a bench can
+price its chunk picks with an *offline-fitted* heuristic (the simulator
+measurement campaign) or with a *refit* from serving telemetry — and which
+one produced the numbers matters when ``BENCH_*.json`` files are diffed
+across PRs. Benches that fit or refit a heuristic note its provenance here
+(one call, keyed by bench name); ``benchmarks.run --json`` folds
+:func:`snapshot` into the JSON meta block as ``heuristic_provenance``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+_NOTES: Dict[str, Dict[str, Any]] = {}
+
+
+def note(bench: str, heuristic: Optional[Any]) -> None:
+    """Record the provenance of the heuristic ``bench`` priced with.
+
+    Accepts anything exposing ``.provenance`` (``StreamHeuristic`` /
+    ``BatchedStreamHeuristic``) or a plain provenance dict; ``None`` clears
+    the bench's note. Unknown objects are recorded as such rather than
+    raising — provenance is observability, never a bench failure.
+    """
+    if heuristic is None:
+        _NOTES.pop(bench, None)
+        return
+    prov = getattr(heuristic, "provenance", heuristic)
+    if not isinstance(prov, dict) or not prov:
+        prov = {"source": "unknown"}
+    _NOTES[bench] = dict(prov)
+
+
+def snapshot() -> Dict[str, Dict[str, Any]]:
+    """A copy of every bench's noted provenance (for the JSON meta block)."""
+    return {name: dict(prov) for name, prov in _NOTES.items()}

@@ -12,6 +12,7 @@ Usage:
 
 from __future__ import annotations
 
+from benchmarks import _provenance
 from benchmarks._sweep import sweep_batched_grid
 from repro.core.autotune.heuristic import fit_batched_stream_heuristic
 from repro.core.streams.simulator import StreamSimulator
@@ -37,6 +38,7 @@ def batched_throughput(
     heur = fit_batched_stream_heuristic(
         sim.dataset(sizes=sizes, batches=tuple(batches), reps=2)
     )
+    _provenance.note("batched_throughput", heur)
     header = ["size", "batch", "num_chunks", "ms_per_batch", "systems_per_sec",
               "heuristic_pick"]
     rows = sweep_batched_grid(

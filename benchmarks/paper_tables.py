@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import _provenance
+
 from repro.core.autotune.heuristic import (
     fit_stream_heuristic,
     gomez_luna_optimum,
@@ -35,7 +37,9 @@ PAPER_TABLE4 = {
 def _fit(seed: int = 1):
     sim = StreamSimulator(seed=seed)
     data = sim.dataset(reps=2)
-    return sim, fit_stream_heuristic(data)
+    heur = fit_stream_heuristic(data)
+    _provenance.note("paper_tables", heur)
+    return sim, heur
 
 
 def table1():

@@ -19,6 +19,8 @@ import time
 import jax
 import numpy as np
 
+from benchmarks import _provenance
+
 from repro.core.autotune.heuristic import fit_batched_stream_heuristic
 from repro.core.streams.simulator import StreamSimulator
 from repro.core.tridiag.api import SolverConfig, TridiagSession
@@ -59,6 +61,7 @@ def _ragged_throughput(mixes, chunk_counts, *, m: int, reps: int):
     heur = fit_batched_stream_heuristic(
         sim.dataset(sizes=(10_000, 100_000, 1_000_000), batches=(1, 8, 64), reps=2)
     )
+    _provenance.note("ragged_throughput", heur)
     header = [
         "mix", "total_size", "num_chunks", "ms_per_batch", "systems_per_sec",
         "max_rel_err", "heuristic_pick", "seg_batches",

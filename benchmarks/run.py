@@ -76,6 +76,7 @@ def main() -> None:
     if not args.skip_slow or args.list:
         from benchmarks import (
             arch_steps,
+            autotune_loop,
             backend_throughput,
             batched_throughput,
             dispatch_latency,
@@ -91,6 +92,7 @@ def main() -> None:
             "dispatch_latency": dispatch_latency.dispatch_latency,
             "serving_stress": serving_stress.serving_stress,
             "arch_steps": arch_steps.arch_step_costs,
+            "autotune_loop": autotune_loop.autotune_loop,
         }
     benches.update(slow)
 
@@ -141,12 +143,18 @@ def _write_json(path: str, results: dict) -> None:
 
     import jax
 
+    from benchmarks import _provenance
+
     payload = {
         "meta": {
             "generated_at": datetime.datetime.now(datetime.timezone.utc)
             .isoformat(timespec="seconds"),
             "jax_backend": jax.default_backend(),
             "argv": sys.argv[1:],
+            # Which heuristic priced each bench's picks: offline-fit (the
+            # simulator campaign) vs refit (serving telemetry), with sample
+            # counts — so BENCH_*.json diffs across PRs stay interpretable.
+            "heuristic_provenance": _provenance.snapshot(),
         },
         "benches": results,
     }

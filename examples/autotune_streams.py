@@ -12,13 +12,20 @@
    SolverConfig, and a TridiagSession runs the planned solves — single,
    ragged mixed-size, and async served traffic with deadline admission — so
    one config object flows from autotune fit to serving.
-6. The generalized tuner picking gradient-bucket counts for the LM framework.
+6. Closing the loop: a shadow-mode session refits the SAME pipeline from its
+   own serving telemetry on the worker's idle time and reports the would-be
+   picks next to the offline fit's (``autotune="live"`` would swap them in).
+7. The generalized tuner picking gradient-bucket counts for the LM framework.
 """
+
+import time
 
 import numpy as np
 
 from repro.api import (
+    BatchObservation,
     HeuristicChunkPolicy,
+    OnlineRefitter,
     SolveRequest,
     SolverConfig,
     TridiagSession,
@@ -32,6 +39,7 @@ from repro.core.streams.measure import measure_dataset
 from repro.core.streams.simulator import PAPER_SIZES, StreamSimulator
 from repro.core.streams.timemodel import sum_overlap
 from repro.core.tridiag import ensure_x64
+from repro.core.tridiag.plan import price_chunks
 from repro.core.tridiag.reference import make_diag_dominant_system, thomas_numpy
 
 
@@ -117,7 +125,64 @@ def main():
               f"single-dispatch fused batch(es); last batch sizes={pb['sizes']} "
               f"({pb['num_chunks']} chunks), max |err| = {err:.2e}")
 
-    print("\n== 6) beyond the paper: gradient-bucket tuning (v5e pod) ==")
+    print("\n== 6) closed-loop: shadow-mode refit from serving telemetry ==")
+    # The paper's fit is a one-shot offline campaign; `repro.telemetry`
+    # closes the loop. A shadow session records every served batch into its
+    # bounded telemetry ring and refits the SAME Eq. 4-7 pipeline from it on
+    # the serve worker's idle time — reporting would-be picks without
+    # touching the active policy (autotune="live" swaps it in atomically).
+    # The ring is seeded with a synthetic calibration window (a machine
+    # where chunking clearly pays) because a cold k=1-only window has no
+    # streamed cells to reconstruct Eq. 5 rows from — a deployment
+    # accumulates those from its own history.
+    demo_sizes = (2_000, 8_000, 32_000)
+    refitter = OnlineRefitter("shadow", min_samples=1, interval_s=0.2)
+    shadow_cfg = SolverConfig(
+        m=10, max_batch=4, max_wait_ms=2.0, autotune="shadow"
+    )
+    with TridiagSession(shadow_cfg, refitter=refitter) as session:
+        t = 0.0
+        for n in demo_sizes:
+            t_non = 1e-3 * n
+            for k in (1, 2, 4, 8):
+                level = float(np.log2(k))
+                gained = (
+                    0.5 * t_non * (k - 1) / k - 0.3 * level - 0.08 * level**2
+                    if k > 1 else 0.0
+                )
+                for _ in range(3):
+                    session.telemetry.record(BatchObservation(
+                        t=t, sizes=(n,), num_chunks=k, backend="demo",
+                        layout="system-major", dispatch="fused",
+                        latency_ms=t_non - gained,
+                        mean_wait_ms=0.0, max_wait_ms=0.0,
+                    ))
+                    t += 0.01
+        futs = [
+            session.submit(SolveRequest(rid, *make_diag_dominant_system(
+                2_000, seed=40 + rid)[:4]))
+            for rid in range(3)
+        ]
+        for fut in futs:
+            fut.result(timeout=30.0)
+        deadline = time.monotonic() + 5.0
+        while (session.stats["autotune"]["refits"] == 0
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+        refit_heur = refitter.last_heuristic()
+        auto = session.stats["autotune"]
+    if refit_heur is None:
+        print("no refit fired within 5 s (thin window) — see stats:", auto)
+    else:
+        for n in demo_sizes:
+            print(f"N={n:>7,}: offline pick = {heur.predict_optimum(n):2d}   "
+                  f"refit would pick = {price_chunks(refit_heur, (n,)):2d}")
+        print(f"shadow mode: {auto['refits']} refit(s) from "
+              f"{auto['observations']['recorded']} observations, "
+              f"provenance={refit_heur.provenance.get('source')}, "
+              f"agreement with active policy = {auto['agreement_rate']}")
+
+    print("\n== 7) beyond the paper: gradient-bucket tuning (v5e pod) ==")
     for params_b, name in ((4e9, "qwen3-4b"), (340e9, "nemotron-340b")):
         n, margin = tune_gradient_buckets(
             grad_bytes=params_b * 2 / 256,

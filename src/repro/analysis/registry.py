@@ -152,11 +152,14 @@ _ENGINE_METHODS = tuple(
         "seconds_to_next_event",
         "_deadline_expired",
         "stats_snapshot",
+        "shed_unmeetable",
     )
 )
 
 _PLAN_PY = "repro/core/tridiag/plan.py"
 _API_PY = "repro/core/tridiag/api.py"
+_TELEMETRY_RING_PY = "repro/telemetry/ring.py"
+_TELEMETRY_REFIT_PY = "repro/telemetry/refit.py"
 
 DEFAULT_REGISTRY = Registry(
     guarded_globals=(
@@ -182,7 +185,7 @@ DEFAULT_REGISTRY = Registry(
         GuardedAttrs(
             module=_API_PY,
             owner="SolveEngine",
-            attrs=("stats",),
+            attrs=("stats", "_latency_model"),
             guards=("_stats_lock",),
             allow_in=("SolveEngine.__init__",),
         ),
@@ -196,9 +199,46 @@ DEFAULT_REGISTRY = Registry(
         GuardedAttrs(
             module=_API_PY,
             owner="TridiagSession",
-            attrs=("_futures", "_worker", "_closed", "_worker_error"),
+            attrs=(
+                "_futures",
+                "_worker",
+                "_closed",
+                "_worker_error",
+                "_active_policy",
+            ),
             guards=("_cv",),
             allow_in=("TridiagSession.__init__",),
+        ),
+        # The telemetry ring is written from the serving hot path and read by
+        # the refitter/exporters on other threads: every touch of its window
+        # and counters must hold its lock.
+        GuardedAttrs(
+            module=_TELEMETRY_RING_PY,
+            owner="TelemetryBuffer",
+            attrs=("_ring", "_recorded", "_dropped"),
+            guards=("_lock",),
+            allow_in=("TelemetryBuffer.__init__",),
+        ),
+        # The refitter's counters and last-fit results are read by
+        # stats_snapshot()/last_heuristic() from any thread while the serve
+        # worker refits; the fits themselves run outside the lock.
+        GuardedAttrs(
+            module=_TELEMETRY_REFIT_PY,
+            owner="OnlineRefitter",
+            attrs=(
+                "_last_attempt_t",
+                "_last_refit_t",
+                "_attempts",
+                "_refits",
+                "_errors",
+                "_agree",
+                "_disagree",
+                "_last_samples",
+                "_last_heuristic",
+                "_last_latency_model",
+            ),
+            guards=("_lock",),
+            allow_in=("OnlineRefitter.__init__",),
         ),
     ),
 )

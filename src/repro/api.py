@@ -7,9 +7,11 @@ docstring and the root README for the full tour.
 """
 
 from repro.core.tridiag.api import (
+    AUTOTUNE_MODES,
     BACKEND_NAMES,
     DISPATCH_MODES,
     AdmissionPolicy,
+    PredictedTimeoutError,
     QueueFullError,
     RequestCancelledError,
     RequestTimedOutError,
@@ -36,18 +38,29 @@ from repro.core.tridiag.plan import (
     plan_cache_stats,
     set_executable_cache_capacity,
 )
+from repro.telemetry import (
+    BatchObservation,
+    LatencyModel,
+    OnlineRefitter,
+    TelemetryBuffer,
+)
 
 __all__ = [
+    "AUTOTUNE_MODES",
     "AdmissionPolicy",
     "BACKEND_NAMES",
+    "BatchObservation",
     "BACKENDS",
     "ChunkPolicy",
     "DISPATCH_MODES",
     "FixedChunkPolicy",
     "FusedExecutor",
     "HeuristicChunkPolicy",
+    "LatencyModel",
+    "OnlineRefitter",
     "PallasBackend",
     "PlanExecutor",
+    "PredictedTimeoutError",
     "QueueFullError",
     "ReferenceBackend",
     "RequestCancelledError",
@@ -58,6 +71,7 @@ __all__ = [
     "SolveRequest",
     "SolverConfig",
     "StageBackend",
+    "TelemetryBuffer",
     "TridiagSession",
     "WorkerDiedError",
     "clear_executable_cache",

@@ -10,13 +10,20 @@ Pipeline (paper §2.4):
 Also includes the Gómez-Luna et al. [6] baseline the paper refutes
 (T_overhead = num_str · τ ⇒ n* = sqrt(sum/τ), reproducing Table 1's
 7.8 / 8.6 / 15.8 / 45.0 / 139.8 column exactly).
+
+Provenance: every fitted heuristic carries a ``provenance`` dict naming how
+it was fitted — ``{"source": "offline-fit", "samples": N}`` from the
+measurement-campaign path below, ``{"source": "refit", ...}`` when the
+closed-loop :class:`~repro.telemetry.refit.OnlineRefitter` refits it from
+serving telemetry — so perf records and benchmarks can attribute chunk
+picks to the fit that produced them.
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -50,12 +57,15 @@ class StreamHeuristic:
     split_size: float = M.SMALL_BIG_SPLIT
     candidates: Tuple[int, ...] = STREAM_CANDIDATES
     metrics: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    #: How this fit came to be: {"source": "offline-fit" | "refit",
+    #: "samples": <rows consumed>, ...} — see the module docstring.
+    provenance: Dict[str, Any] = field(default_factory=dict)
 
     # -- model evaluation ----------------------------------------------------
-    def predict_sum(self, size) -> np.ndarray:
+    def predict_sum(self, size: Any) -> np.ndarray:
         return self.sum_model.predict(np.atleast_1d(np.asarray(size, np.float64)))
 
-    def predict_overhead(self, size, num_str) -> np.ndarray:
+    def predict_overhead(self, size: Any, num_str: Any) -> np.ndarray:
         size = np.atleast_1d(np.asarray(size, dtype=np.float64))
         num_str = np.broadcast_to(np.asarray(num_str, dtype=np.float64), size.shape)
         if self.popt_small is None:
@@ -104,10 +114,17 @@ class BatchedStreamHeuristic:
     def metrics(self) -> Dict[str, Dict[str, float]]:
         return self.base.metrics
 
-    def predict_sum(self, size, batch=1) -> np.ndarray:
+    @property
+    def provenance(self) -> Dict[str, Any]:
+        """The base fit's provenance (offline-fit vs refit, sample count)."""
+        return self.base.provenance
+
+    def predict_sum(self, size: Any, batch: int = 1) -> np.ndarray:
         return self.base.predict_sum(np.asarray(size, np.float64) * batch)
 
-    def predict_overhead(self, size, num_str, batch=1) -> np.ndarray:
+    def predict_overhead(
+        self, size: Any, num_str: Any, batch: int = 1
+    ) -> np.ndarray:
         return self.base.predict_overhead(
             np.asarray(size, np.float64) * batch, num_str
         )
@@ -166,10 +183,15 @@ def fit_stream_heuristic(
     # ---- Eq. 7: T_overhead ~ (size, num_str), small/big regimes ----
     # The size feature is the effective in-flight element count size·batch
     # (batch defaults to 1 on the paper's single-system campaign).
-    def eff(r):
-        return r["size"] * r.get("batch", 1)
+    def eff(r: Dict[str, Any]) -> float:
+        return float(r["size"] * r.get("batch", 1))
 
-    def fit_regime(rows, form, p0, tag):
+    def fit_regime(
+        rows: List[Dict[str, Any]],
+        form: Callable[..., np.ndarray],
+        p0: Sequence[float],
+        tag: str,
+    ) -> Optional[np.ndarray]:
         if not rows:
             return None
         size = np.array([eff(r) for r in rows], dtype=np.float64)
@@ -196,4 +218,5 @@ def fit_stream_heuristic(
         popt_big=popt_big,
         candidates=tuple(candidates),
         metrics=metrics,
+        provenance={"source": "offline-fit", "samples": len(data)},
     )

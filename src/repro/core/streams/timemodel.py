@@ -8,6 +8,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Iterable, Sequence, Tuple
 
+import numpy as np
+
 # Powers of two up to the Hyper-Q hardware-queue limit (paper §2.1).
 STREAM_CANDIDATES: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
 
@@ -102,6 +104,62 @@ def overhead_from_measurement(
 def gain(num_str: int, sum_: float, t_overhead: float) -> float:
     """LHS-vs-RHS margin of Eq. (6): positive ⇒ streams beat serial."""
     return (num_str - 1) / num_str * sum_ - t_overhead
+
+
+@dataclass(frozen=True)
+class LatencyModel:
+    """Eq.-2-shaped dispatch-latency predictor, fitted from serving telemetry.
+
+    Eq. 2 decomposes a streamed solve into a serial part (dominant transfer +
+    reduced solve, linear in the effective size N) and an overlappable part
+    divided across the ``num_str`` streams/chunks. The serving analogue keeps
+    exactly that shape with free coefficients::
+
+        latency_ms(N, k)  ≈  c0  +  c1 · N  +  c2 · N / k
+
+    fitted in closed form (``numpy.linalg.lstsq`` — deterministic given the
+    same observations) from per-batch ``(effective_size, num_chunks,
+    latency_ms)`` telemetry. The predicted-latency admission loop
+    (``SolverConfig.max_predicted_ms``) uses :meth:`predict_ms` to pack
+    batches up to a latency budget and to shed requests whose predicted
+    completion would blow their deadline; predicted-vs-actual residuals ride
+    every subsequent ``BatchObservation``, so the model's error is itself
+    observable.
+    """
+
+    coef: Tuple[float, float, float]
+    samples: int = 0
+
+    @staticmethod
+    def _design(eff_sizes: np.ndarray, num_chunks: np.ndarray) -> np.ndarray:
+        n = np.asarray(eff_sizes, dtype=np.float64)
+        k = np.maximum(np.asarray(num_chunks, dtype=np.float64), 1.0)
+        return np.stack([np.ones_like(n), n, n / k], axis=1)
+
+    @classmethod
+    def fit(
+        cls,
+        eff_sizes: Sequence[float],
+        num_chunks: Sequence[int],
+        latencies_ms: Sequence[float],
+    ) -> "LatencyModel":
+        """Least-squares fit of the three coefficients (rank-deficient inputs
+        get the minimum-norm solution, so a single observed ``(N, k)`` cell
+        still yields a usable — if flat — predictor)."""
+        y = np.asarray(latencies_ms, dtype=np.float64)
+        if y.size == 0:
+            raise ValueError("LatencyModel.fit needs at least one observation")
+        a = cls._design(np.asarray(eff_sizes), np.asarray(num_chunks))
+        coef, _, _, _ = np.linalg.lstsq(a, y, rcond=None)
+        return cls(coef=(float(coef[0]), float(coef[1]), float(coef[2])),
+                   samples=int(y.size))
+
+    def predict_ms(self, eff_size: float, num_chunks: int) -> float:
+        """Predicted dispatch latency (ms) of one fused solve; clamped >= 0."""
+        c0, c1, c2 = self.coef
+        n = float(eff_size)
+        k = max(1.0, float(num_chunks))
+        return max(0.0, c0 + c1 * n + c2 * n / k)
 
 
 def select_optimum(

@@ -88,8 +88,9 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.streams.timemodel import LatencyModel
 from repro.core.tridiag.batched import fuse_systems, split_systems
-from repro.core.tridiag.layout import LAYOUTS
+from repro.core.tridiag.layout import LAYOUTS, resolve_layout
 from repro.core.tridiag.plan import (
     BACKENDS,
     BackendLike,
@@ -108,11 +109,15 @@ from repro.core.tridiag.plan import (
     set_plan_cache_capacity,
 )
 from repro.core.tridiag.ragged import System, fuse_ragged, split_ragged
+from repro.telemetry.refit import AUTOTUNE_MODES, OnlineRefitter
+from repro.telemetry.ring import BatchObservation, TelemetryBuffer
 
 __all__ = [
+    "AUTOTUNE_MODES",
     "AdmissionPolicy",
     "DISPATCH_MODES",
     "LAYOUTS",
+    "PredictedTimeoutError",
     "QueueFullError",
     "RequestCancelledError",
     "RequestTimedOutError",
@@ -151,6 +156,16 @@ class RequestTimedOutError(ServingError):
 class RequestCancelledError(ServingError):
     """The request was removed from the queue by ``SolveFuture.cancel()``
     before its batch was taken."""
+
+
+class PredictedTimeoutError(RequestTimedOutError):
+    """Predicted-latency admission shed the request *before* dispatch: the
+    active :class:`~repro.core.streams.timemodel.LatencyModel` predicted the
+    solve would complete after the request's ``timeout_ms`` deadline, so
+    queueing it into a batch could only waste the batch's budget. Subclasses
+    :class:`RequestTimedOutError` so deadline-aware callers need no new
+    handler; catch this type specifically to distinguish a model-predicted
+    shed from an observed queue-wait expiry."""
 
 
 class WorkerDiedError(ServingError):
@@ -270,6 +285,33 @@ class SolverConfig:
                    their signature, so sessions share hits — which means this
                    knob affects every live session and the last-constructed
                    session wins; set it from one place in a deployment.
+    ``autotune``   closed-loop refit mode (:mod:`repro.telemetry`): ``"off"``
+                   (default — no refitter), ``"shadow"`` (periodically refit
+                   the heuristic from serving telemetry but only *report*
+                   would-be picks via the ``stats["autotune"]`` agreement
+                   counters), or ``"live"`` (additionally swap the session's
+                   chunk policy to the refit heuristic, atomically).
+    ``telemetry_capacity``
+                   bound of the per-batch observation ring
+                   (:class:`~repro.telemetry.ring.TelemetryBuffer`); 0
+                   disables collection (invalid with autotune enabled).
+                   Collection is active iff ``autotune != "off"`` or
+                   ``max_predicted_ms`` is set — otherwise the serving hot
+                   path records nothing.
+    ``refit_min_samples`` / ``refit_interval_s``
+                   the refitter's gates: a refit attempt needs at least this
+                   many buffered observations AND at least this many seconds
+                   since the previous attempt (see
+                   :class:`~repro.telemetry.refit.OnlineRefitter`).
+    ``max_predicted_ms``
+                   predicted-latency admission budget: with a fitted
+                   :class:`~repro.core.streams.timemodel.LatencyModel`
+                   active, batches are packed only up to this predicted
+                   dispatch latency (the rest of the queue waits), and a
+                   queued request whose predicted completion would blow its
+                   own ``timeout_ms`` deadline is shed *before* dispatch with
+                   :class:`PredictedTimeoutError`. None (default) disables
+                   predicted admission.
 
     Frozen: a config can be shared between sessions, stored alongside fitted
     heuristics, and varied with :meth:`replace`. :meth:`validate` checks the
@@ -289,6 +331,11 @@ class SolverConfig:
     allow_ragged: bool = True
     max_queue: Optional[int] = None
     plan_cache_capacity: Optional[int] = None
+    autotune: str = "off"
+    telemetry_capacity: int = 1024
+    refit_min_samples: int = 64
+    refit_interval_s: float = 30.0
+    max_predicted_ms: Optional[float] = None
 
     # -- validation ----------------------------------------------------------
     def validate(self) -> "SolverConfig":
@@ -358,6 +405,36 @@ class SolverConfig:
                 f"plan_cache_capacity={self.plan_cache_capacity}: must be "
                 f">= 0 (0 disables plan memoisation, None leaves the "
                 f"process-wide default)"
+            )
+        if self.autotune not in AUTOTUNE_MODES:
+            raise ValueError(
+                f"autotune={self.autotune!r}: must be one of "
+                f"{sorted(AUTOTUNE_MODES)} ('shadow' reports would-be refit "
+                f"picks, 'live' swaps them in)"
+            )
+        if self.telemetry_capacity < 0:
+            raise ValueError(
+                f"telemetry_capacity={self.telemetry_capacity}: must be "
+                f">= 0 (0 disables collection)"
+            )
+        if self.autotune != "off" and self.telemetry_capacity == 0:
+            raise ValueError(
+                f"autotune={self.autotune!r} needs telemetry to refit from; "
+                f"set telemetry_capacity >= refit_min_samples "
+                f"(got telemetry_capacity=0)"
+            )
+        if self.refit_min_samples < 1:
+            raise ValueError(
+                f"refit_min_samples={self.refit_min_samples}: must be >= 1"
+            )
+        if self.refit_interval_s < 0:
+            raise ValueError(
+                f"refit_interval_s={self.refit_interval_s}: must be >= 0"
+            )
+        if self.max_predicted_ms is not None and self.max_predicted_ms <= 0:
+            raise ValueError(
+                f"max_predicted_ms={self.max_predicted_ms}: must be > 0 "
+                f"(None disables predicted-latency admission)"
             )
         return self
 
@@ -522,6 +599,8 @@ class SolveEngine:
         on_result: Optional[Callable[[int, np.ndarray], None]] = None,
         on_error: Optional[Callable[[int, BaseException], None]] = None,
         executor: Any = None,
+        telemetry: Optional[TelemetryBuffer] = None,
+        max_predicted_ms: Optional[float] = None,
     ) -> None:
         if dispatch not in DISPATCH_MODES:
             raise ValueError(
@@ -561,6 +640,13 @@ class SolveEngine:
             )
         self._on_result = on_result
         self._on_error = on_error
+        # Telemetry is optional and bounded: with no buffer (or capacity 0)
+        # the hot path records nothing. The latency model rides behind
+        # _stats_lock because the worker swaps it mid-serve (refits) while
+        # _dispatch and shed_unmeetable read it.
+        self.telemetry = telemetry
+        self.max_predicted_ms = max_predicted_ms
+        self._latency_model: Optional[LatencyModel] = None
         self._queue: List[_Pending] = []
         self._seq = 0
         self._results: Dict[int, np.ndarray] = {}
@@ -578,8 +664,100 @@ class SolveEngine:
             "timed_out": 0,
             "cancelled": 0,
             "failed": 0,
+            "shed_predicted": 0,
             "queue_high_water": 0,
         }
+
+    # -- predicted-latency admission ------------------------------------------
+    def set_latency_model(self, model: Optional[LatencyModel]) -> None:
+        """Install (or clear) the dispatch-latency predictor the admission
+        loop prices batches with — called by the session when a refit lands,
+        or directly by tests/benchmarks injecting a known model."""
+        with self._stats_lock:
+            self._latency_model = model
+
+    def latency_model(self) -> Optional[LatencyModel]:
+        with self._stats_lock:
+            return self._latency_model
+
+    def predicted_batch_ms(self, sizes: Sequence[int]) -> Optional[float]:
+        """Predicted dispatch latency of a batch with composition ``sizes``
+        under the current chunk pricing; None while no model is fitted."""
+        model = self.latency_model()
+        if model is None or not sizes:
+            return None
+        sizes = tuple(sizes)
+        return model.predict_ms(
+            effective_size(sizes), self.pick_chunks_ragged(sizes)
+        )
+
+    def shed_unmeetable(self, now: Optional[float] = None) -> int:
+        """Shed every queued request whose own-deadline is predicted blown:
+        ``now + predicted_ms(request alone) > expiry`` means even an
+        immediate solo dispatch would finish late, so the request is failed
+        *now* with :class:`PredictedTimeoutError` instead of wasting a
+        batch's budget. Needs an active latency model, predicted admission
+        enabled (``max_predicted_ms``) and an ``on_error`` channel; no-op
+        (returns 0) otherwise. Runs before every batch take."""
+        if (
+            self.max_predicted_ms is None
+            or self._on_error is None
+            or not self._queue
+            or self.latency_model() is None
+        ):
+            return 0
+        now = self._clock() if now is None else now
+        live: List[_Pending] = []
+        doomed: List[_Pending] = []
+        for p in self._queue:
+            if p.expiry is None:
+                live.append(p)
+                continue
+            pred = self.predicted_batch_ms((p.req.size,))
+            if pred is not None and now + pred / 1e3 > p.expiry:
+                doomed.append(p)
+            else:
+                live.append(p)
+        if not doomed:
+            return 0
+        self._queue = live
+        with self._stats_lock:
+            self.stats["shed_predicted"] += len(doomed)
+            self.stats["timed_out"] += len(doomed)
+        for p in doomed:
+            err = PredictedTimeoutError(
+                f"request {p.req.rid} shed before dispatch: predicted solve "
+                f"latency would end past its timeout_ms={p.req.timeout_ms} "
+                f"deadline (predicted-latency admission, max_predicted_ms="
+                f"{self.max_predicted_ms})"
+            )
+            try:
+                self._on_error(p.req.rid, err)
+            except Exception:
+                pass  # an error channel that raises must not kill serving
+        return len(doomed)
+
+    def _pack_by_budget(
+        self, take: List[_Pending]
+    ) -> Tuple[List[_Pending], List[_Pending]]:
+        """Trim an admitted group to the ``max_predicted_ms`` budget: keep
+        the longest prefix whose predicted batch latency fits (always at
+        least one request — a solo over-budget request must still dispatch,
+        or it would starve). Returns ``(take, deferred)``; deferred entries
+        go back to the queue head in admission order."""
+        if self.max_predicted_ms is None or len(take) <= 1:
+            return take, []
+        if self.latency_model() is None:
+            return take, []
+        kept = len(take)
+        while kept > 1:
+            pred = self.predicted_batch_ms(
+                tuple(p.req.size for p in take[:kept])
+            )
+            if pred is None or pred <= self.max_predicted_ms:
+                break
+            kept -= 1
+        return take[:kept], take[kept:]
 
     # -- scheduling ----------------------------------------------------------
     def submit(self, req: SolveRequest) -> None:
@@ -760,6 +938,7 @@ class SolveEngine:
         itself runs outside the lock so submits keep flowing (and getting
         exact timestamps) while a batch is in flight."""
         self.shed_expired(now)
+        self.shed_unmeetable(now)
         if self._queue and (
             len(self._queue) >= self.admission.max_batch
             or self._deadline_expired(now)
@@ -778,7 +957,12 @@ class SolveEngine:
     def _take_group(self) -> List[_Pending]:
         q = self._queue
         if self.admission.allow_ragged:
-            take, self._queue = q[: self.max_batch], q[self.max_batch :]
+            take, rest = q[: self.max_batch], q[self.max_batch :]
+            # Predicted-latency packing: the deferred suffix of the take is a
+            # contiguous run of the sorted queue, so prepending it to the
+            # rest preserves admission order exactly.
+            take, deferred = self._pack_by_budget(take)
+            self._queue = deferred + rest
             return take
         # Size-segregated baseline: only the head request's size-mates ride.
         size0 = q[0].req.size
@@ -788,6 +972,9 @@ class SolveEngine:
                 take.append(p)
             else:
                 rest.append(p)
+        take, deferred = self._pack_by_budget(take)
+        for p in deferred:
+            bisect.insort(rest, p, key=lambda p: p.sort_key)
         self._queue = rest
         return take
 
@@ -842,12 +1029,22 @@ class SolveEngine:
             sizes = tuple(r.size for r in reqs)
             same_size = len(set(sizes)) == 1
             dl, d, du, b, sizes = fuse_ragged([(r.dl, r.d, r.du, r.b) for r in reqs])
-            if self.policy is not None:
-                plan = build_plan(sizes, self.m, policy=self.policy)
+            # One read of the policy: a live-mode refit swaps it between
+            # dispatches, and this batch must be priced (and recorded) by
+            # exactly one of the two.
+            policy = self.policy
+            if policy is not None:
+                plan = build_plan(sizes, self.m, policy=policy)
             else:
                 plan = build_plan(
                     sizes, self.m, num_chunks=self.pick_chunks_ragged(sizes)
                 )
+            model = self.latency_model()
+            predicted_ms = (
+                None
+                if model is None
+                else model.predict_ms(effective_size(sizes), plan.num_chunks)
+            )
             x, _ = self._executor.execute(plan, dl, d, du, b)
             # copy: split_ragged returns views, which would otherwise pin the
             # whole fused solution for as long as any one result is retained
@@ -876,6 +1073,39 @@ class SolveEngine:
                         "max_wait_ms": float(np.max(waits_ms)),
                     }
                 )
+            if self.telemetry is not None and self.telemetry.enabled:
+                # Guarded separately: telemetry is observability, and a
+                # recording failure must not fail a *solved* batch.
+                try:
+                    self.telemetry.record(
+                        BatchObservation(
+                            t=now,
+                            sizes=sizes,
+                            num_chunks=plan.num_chunks,
+                            backend=str(
+                                getattr(
+                                    getattr(self._executor, "backend", None),
+                                    "name",
+                                    "?",
+                                )
+                            ),
+                            layout=resolve_layout(
+                                self.layout,
+                                sizes,
+                                self.m,
+                                fused=self.dispatch != "staged",
+                            ),
+                            dispatch=(
+                                "staged" if self.dispatch == "staged" else "fused"
+                            ),
+                            latency_ms=dt * 1e3,
+                            mean_wait_ms=float(np.mean(waits_ms)),
+                            max_wait_ms=float(np.max(waits_ms)),
+                            predicted_ms=predicted_ms,
+                        )
+                    )
+                except Exception:
+                    pass
         except Exception as e:
             # A bad dispatch fails *these* requests and leaves the engine
             # serving; the legacy shim (no on_error) keeps the raise.
@@ -930,7 +1160,12 @@ class TridiagSession:
     closes on exit.
     """
 
-    def __init__(self, config: Optional[SolverConfig] = None) -> None:
+    def __init__(
+        self,
+        config: Optional[SolverConfig] = None,
+        *,
+        refitter: Optional[OnlineRefitter] = None,
+    ) -> None:
         self.config = (SolverConfig() if config is None else config).validate()
         self.backend = resolve_backend(self.config.backend)
         self._executor = PlanExecutor(backend=self.backend, layout=self.config.layout)
@@ -944,6 +1179,33 @@ class TridiagSession:
         self._worker: Optional[threading.Thread] = None
         self._closed = False
         self._worker_error: Optional[BaseException] = None
+        # Closed-loop autotune plumbing. Telemetry collection is on iff
+        # something consumes it (a refitter, or predicted admission); the
+        # buffer stays capacity-0 otherwise so the hot path records nothing.
+        # ``refitter=`` injects a pre-built refitter (typically with a fake
+        # clock — the deterministic-test seam); the config builds one
+        # whenever ``autotune != "off"``.
+        telemetry_on = (
+            self.config.autotune != "off"
+            or self.config.max_predicted_ms is not None
+        )
+        self._telemetry = TelemetryBuffer(
+            capacity=self.config.telemetry_capacity if telemetry_on else 0
+        )
+        if refitter is not None:
+            self._refitter: Optional[OnlineRefitter] = refitter
+        elif self.config.autotune != "off":
+            self._refitter = OnlineRefitter(
+                mode=self.config.autotune,
+                min_samples=self.config.refit_min_samples,
+                interval_s=self.config.refit_interval_s,
+            )
+        else:
+            self._refitter = None
+        # The chunk policy currently pricing dispatches: starts as the
+        # config's, swapped (under _cv) by a live-mode refit. plan_for and
+        # the engine read this, never config.policy directly.
+        self._active_policy = self.config.policy
         self._engine = SolveEngine(
             m=self.config.m,
             policy=self.config.policy,
@@ -957,13 +1219,20 @@ class TridiagSession:
             max_queue=self.config.max_queue,
             on_result=lambda rid, x: self._resolve_future(rid, value=x),
             on_error=lambda rid, e: self._resolve_future(rid, error=e),
+            telemetry=self._telemetry,
+            max_predicted_ms=self.config.max_predicted_ms,
         )
 
     # -- planning ------------------------------------------------------------
     def plan_for(self, sizes: Sizes) -> SolvePlan:
-        """The plan this session executes for ``sizes`` (int or sequence)."""
-        if self.config.policy is not None:
-            return build_plan(sizes, self.config.m, policy=self.config.policy)
+        """The plan this session executes for ``sizes`` (int or sequence).
+
+        Priced by the *active* chunk policy — the config's, until a
+        live-mode refit swaps in the telemetry-fitted one."""
+        with self._cv:
+            policy = self._active_policy
+        if policy is not None:
+            return build_plan(sizes, self.config.m, policy=policy)
         return build_plan(sizes, self.config.m, num_chunks=self.config.num_chunks or 1)
 
     def _cast(self, *arrays: Any) -> Tuple[Any, ...]:
@@ -1155,6 +1424,44 @@ class TridiagSession:
         if fut is not None:
             fut._resolve(value, error)
 
+    # -- closed-loop autotune ------------------------------------------------
+    @property
+    def telemetry(self) -> TelemetryBuffer:
+        """The session's per-batch observation ring (capacity 0 — recording
+        nothing — unless ``autotune`` or ``max_predicted_ms`` enabled it).
+        ``snapshot()`` / ``export_jsonl()`` are safe while serving."""
+        return self._telemetry
+
+    def _refit_wait_s(self) -> Optional[float]:
+        """How long the idle worker may sleep before the next refit could
+        fire (None: no refitter, or not enough observations yet — a future
+        dispatch will wake the worker anyway)."""
+        if self._refitter is None:
+            return None
+        return self._refitter.seconds_until_due(len(self._telemetry))
+
+    def _maybe_refit(self) -> None:
+        """One idle-time refit step. Runs on the worker thread between
+        dispatches (and is directly callable from deterministic tests): asks
+        the refitter to refit if due, then applies the result — the latency
+        model always (it serves predicted admission in every mode), the
+        chunk policy only when the refitter produced one (live mode),
+        swapped under the session lock so ``plan_for`` and the engine see
+        old-or-new, never half."""
+        if self._refitter is None:
+            return
+        result = self._refitter.maybe_refit(
+            self._telemetry, pick_active=self._engine.pick_chunks_ragged
+        )
+        if result is None:
+            return
+        if result.latency_model is not None:
+            self._engine.set_latency_model(result.latency_model)
+        if result.policy is not None:
+            with self._cv:
+                self._active_policy = result.policy
+                self._engine.policy = result.policy
+
     def _serve_loop(self) -> None:
         """Worker: dispatch due batches, sleep exactly until the next trigger.
 
@@ -1177,6 +1484,10 @@ class TridiagSession:
         """
         try:
             while True:
+                # Refits run on the worker's idle time, OUTSIDE the lock —
+                # the fit is the expensive part and submits must keep
+                # flowing through it.
+                self._maybe_refit()
                 with self._cv:
                     now = self._engine._clock()
                     group = self._engine.take_due_group(now)
@@ -1187,11 +1498,19 @@ class TridiagSession:
                                 return
                             group = self._engine._take_group()  # drain mode
                         elif self._engine.pending() == 0:
-                            self._cv.wait()
+                            self._cv.wait(timeout=self._refit_wait_s())
                             continue
                         else:
+                            ticks = [
+                                t
+                                for t in (
+                                    self._engine.seconds_to_next_event(now),
+                                    self._refit_wait_s(),
+                                )
+                                if t is not None
+                            ]
                             self._cv.wait(
-                                timeout=self._engine.seconds_to_next_event(now)
+                                timeout=min(ticks) if ticks else None
                             )
                             continue
                 try:
@@ -1232,15 +1551,25 @@ class TridiagSession:
         ``systems``, ``wall_s``, ``per_batch``), the load-shedding counters
         (``rejected``, ``timed_out``, ``cancelled``, ``failed``), queue
         occupancy (``queue_depth``, ``queue_high_water``, ``unresolved`` =
-        :meth:`pending`), and the process-wide ``plan_cache`` /
+        :meth:`pending`), the process-wide ``plan_cache`` /
         ``executable_cache`` hit/miss counters from
-        :mod:`repro.core.tridiag.plan`.
+        :mod:`repro.core.tridiag.plan`, and the closed-loop ``autotune``
+        block — refit attempts/runs/errors, last-refit age, the
+        shadow-vs-live pick agreement counters, and the telemetry ring's
+        recorded/dropped/buffered observation counts.
         """
         with self._cv:
             snap = self._engine.stats_snapshot()
             snap["unresolved"] = len(self._futures)
         snap["plan_cache"] = plan_cache_stats()
         snap["executable_cache"] = executable_cache_stats()
+        autotune: Dict[str, Any] = (
+            self._refitter.stats_snapshot()
+            if self._refitter is not None
+            else {"mode": "off"}
+        )
+        autotune["observations"] = self._telemetry.counters()
+        snap["autotune"] = autotune
         return snap
 
     def close(self) -> None:

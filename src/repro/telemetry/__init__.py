@@ -1,0 +1,58 @@
+"""``repro.telemetry`` — serving telemetry + closed-loop heuristic refit.
+
+The paper calibrates its stream-count heuristic (Eq. 4–7) once, offline; a
+production serving system should refit itself from live traffic so chunk
+picks track the actual hardware. This package is that loop, in three layers:
+
+**Collection** (:mod:`repro.telemetry.ring`)
+    ``SolveEngine._dispatch`` records one :class:`BatchObservation` per
+    served batch — composition, chunk pick, resolved route, queue wait,
+    latency, predicted latency — into a lock-protected bounded
+    :class:`TelemetryBuffer` (near-zero hot-path cost; ``snapshot()`` and
+    JSONL export for offline analysis). Exposed as ``session.telemetry``.
+
+**Refit** (:mod:`repro.telemetry.refit`)
+    The config-gated :class:`OnlineRefitter` (``SolverConfig.autotune =
+    "off" | "shadow" | "live"``) periodically reruns the paper's fitting
+    pipeline on the accumulated observations (injectable clock, min-sample
+    and max-staleness thresholds, fp-deterministic given the same
+    observations). ``"live"`` swaps the session's chunk policy atomically;
+    ``"shadow"`` only reports would-be picks (the agreement counters).
+
+**Predicted-latency admission** (:class:`LatencyModel` +
+:mod:`repro.core.tridiag.api`)
+    The refitter also fits an Eq.-2-shaped
+    :class:`~repro.core.streams.timemodel.LatencyModel`; the admission loop
+    uses it to pack batches up to ``SolverConfig.max_predicted_ms`` and to
+    shed requests whose predicted completion would blow their deadline
+    (:class:`repro.api.PredictedTimeoutError`), with predicted-vs-actual
+    residuals recorded back into telemetry.
+
+Usage::
+
+    cfg = SolverConfig(autotune="live", refit_min_samples=256,
+                       refit_interval_s=30.0, max_predicted_ms=50.0)
+    with TridiagSession(cfg) as session:
+        ...serve...
+        session.telemetry.export_jsonl("observations.jsonl")
+        print(session.stats["autotune"])
+"""
+
+from repro.core.streams.timemodel import LatencyModel
+from repro.telemetry.refit import (
+    AUTOTUNE_MODES,
+    OnlineRefitter,
+    RefitResult,
+    dataset_from_observations,
+)
+from repro.telemetry.ring import BatchObservation, TelemetryBuffer
+
+__all__ = [
+    "AUTOTUNE_MODES",
+    "BatchObservation",
+    "LatencyModel",
+    "OnlineRefitter",
+    "RefitResult",
+    "TelemetryBuffer",
+    "dataset_from_observations",
+]

@@ -421,3 +421,91 @@ def test_repo_lock_guard_rule_is_wired_to_real_files():
     covered += [e.module for e in DEFAULT_REGISTRY.guarded_attrs]
     for suffix in covered:
         assert (REPO / "src" / suffix).exists(), suffix
+
+
+# ------------------------------------- TRD001: telemetry registry entries --
+TELEMETRY_RING_PATH = "src/repro/telemetry/ring.py"
+TELEMETRY_REFIT_PATH = "src/repro/telemetry/refit.py"
+
+
+def test_trd001_telemetry_ring_bad_unguarded_touch():
+    """The real DEFAULT_REGISTRY entry fires on an unguarded touch of the
+    ring's window/counters outside the allowlist."""
+    found = check_source(
+        "class TelemetryBuffer:\n"
+        "    def peek(self):\n"
+        "        return len(self._ring) + self._dropped\n",
+        TELEMETRY_RING_PATH,
+        registry=DEFAULT_REGISTRY,
+        select=["TRD001"],
+    )
+    assert found and set(codes(found)) == {"TRD001"}
+
+
+def test_trd001_telemetry_ring_good_guarded_and_init():
+    found = check_source(
+        "class TelemetryBuffer:\n"
+        "    def __init__(self):\n"
+        "        self._ring = []\n"
+        "        self._recorded = 0\n"
+        "        self._dropped = 0\n"
+        "    def record(self, o):\n"
+        "        with self._lock:\n"
+        "            self._ring.append(o)\n"
+        "            self._recorded += 1\n",
+        TELEMETRY_RING_PATH,
+        registry=DEFAULT_REGISTRY,
+        select=["TRD001"],
+    )
+    assert found == []
+
+
+def test_trd001_refitter_bad_counter_outside_lock():
+    found = check_source(
+        "class OnlineRefitter:\n"
+        "    def bump(self):\n"
+        "        self._refits += 1\n"
+        "        return self._last_heuristic\n",
+        TELEMETRY_REFIT_PATH,
+        registry=DEFAULT_REGISTRY,
+        select=["TRD001"],
+    )
+    assert found and set(codes(found)) == {"TRD001"}
+
+
+def test_trd001_refitter_good_under_lock():
+    found = check_source(
+        "class OnlineRefitter:\n"
+        "    def bump(self):\n"
+        "        with self._lock:\n"
+        "            self._refits += 1\n"
+        "            self._last_refit_t = 1.0\n",
+        TELEMETRY_REFIT_PATH,
+        registry=DEFAULT_REGISTRY,
+        select=["TRD001"],
+    )
+    assert found == []
+
+
+def test_default_registry_covers_telemetry_state():
+    """Wiring test: the registry's telemetry entries point at real files and
+    name the state those files actually guard."""
+    ring = [
+        e
+        for e in DEFAULT_REGISTRY.guarded_attrs
+        if e.module.endswith("repro/telemetry/ring.py")
+    ]
+    refit = [
+        e
+        for e in DEFAULT_REGISTRY.guarded_attrs
+        if e.module.endswith("repro/telemetry/refit.py")
+    ]
+    assert ring and ring[0].owner == "TelemetryBuffer"
+    assert set(ring[0].attrs) >= {"_ring", "_recorded", "_dropped"}
+    assert refit and refit[0].owner == "OnlineRefitter"
+    assert {"_refits", "_last_heuristic", "_last_latency_model"} <= set(
+        refit[0].attrs
+    )
+    for e in ring + refit:
+        assert e.guards == ("_lock",)
+        assert (REPO / "src" / e.module).exists()

@@ -467,3 +467,134 @@ def test_legacy_shim_rides_max_queue():
     assert svc.stats["rejected"] == 1
     out = svc.flush()
     assert sorted(out) == [0, 1]
+
+
+# ----------------------------------------------- predicted-latency admission --
+def _planted_model(pred_ms):
+    """A latency model predicting a constant ``pred_ms`` for every batch."""
+    from repro.api import LatencyModel
+
+    return LatencyModel(coef=(float(pred_ms), 0.0, 0.0), samples=1)
+
+
+def test_predicted_shed_fires_before_dispatch():
+    """A queued request whose predicted completion blows its own deadline is
+    shed with PredictedTimeoutError BEFORE any dispatch touches it — the
+    executor must never see its batch."""
+    session = TridiagSession(
+        SolverConfig(m=10, max_batch=64, max_wait_ms=50.0, max_predicted_ms=50.0)
+    )
+    try:
+        counting = WrappingExecutor(session._engine._executor)
+        session._engine._executor = counting
+        # Every solve is predicted to take 1000 ms; a 100 ms deadline is
+        # structurally unmeetable.
+        session._engine.set_latency_model(_planted_model(1000.0))
+        fut = session.submit(SolveRequest(0, *_sys(60, 0), timeout_ms=100.0))
+        err = fut.exception(timeout=10.0)
+        assert isinstance(err, api_mod.PredictedTimeoutError)
+        assert isinstance(err, RequestTimedOutError)  # deadline-aware callers
+        assert counting.calls == 0  # shed pre-dispatch, never executed
+        st = session.stats
+        assert st["shed_predicted"] == 1
+        assert st["timed_out"] == 1
+        assert st["batches"] == 0
+        # A deadline-less request on the same session still serves normally.
+        dl, d, du, b = _sys(60, 1)
+        f2 = session.submit(SolveRequest(1, dl, d, du, b))
+        assert _rel_err(f2.result(timeout=10.0), thomas_numpy(dl, d, du, b)) < 1e-11
+        assert counting.calls == 1
+    finally:
+        session.close()
+
+
+def test_predicted_shed_needs_the_budget_knob():
+    """Without max_predicted_ms the model is advisory only: predictions are
+    recorded, nothing is shed."""
+    session = TridiagSession(SolverConfig(m=10, max_batch=1))
+    try:
+        session._engine.set_latency_model(_planted_model(1000.0))
+        dl, d, du, b = _sys(60, 0)
+        fut = session.submit(SolveRequest(0, dl, d, du, b, timeout_ms=60_000.0))
+        assert _rel_err(fut.result(timeout=10.0), thomas_numpy(dl, d, du, b)) < 1e-11
+        assert session.stats["shed_predicted"] == 0
+    finally:
+        session.close()
+
+
+def test_budget_packs_batches_and_defers_the_rest():
+    """Engine-level: with predicted latency linear in effective size and a
+    50 ms budget, a 6-deep queue of 60-element systems (predicted 20 ms
+    each... per-batch = eff_size/3 ms) packs 2 per dispatch — admission
+    order preserved, everything eventually served."""
+    from repro.api import LatencyModel
+
+    done, failed = {}, {}
+    eng = SolveEngine(
+        m=10,
+        admission=api_mod.AdmissionPolicy(max_batch=64, max_wait_ms=0.0),
+        max_predicted_ms=50.0,
+        on_result=lambda rid, x: done.__setitem__(rid, x),
+        on_error=lambda rid, e: failed.__setitem__(rid, e),
+    )
+    # predict eff/3 ms: one 60-system -> 20ms, two -> 40ms, three -> 60ms.
+    eng.set_latency_model(LatencyModel(coef=(0.0, 1.0 / 3.0, 0.0), samples=1))
+    systems = {rid: _sys(60, rid) for rid in range(6)}
+    for rid, s in systems.items():
+        eng.submit(SolveRequest(rid, *s))
+    while eng.pending():
+        eng.poll()
+    assert failed == {}
+    assert sorted(done) == list(range(6))
+    for rid, (dl, d, du, b) in systems.items():
+        assert _rel_err(done[rid], thomas_numpy(dl, d, du, b)) < 1e-11
+    st = eng.stats_snapshot()
+    assert [pb["systems"] for pb in st["per_batch"]] == [2, 2, 2]
+    # Packing defers, it never sheds: every request was served.
+    assert st["shed_predicted"] == 0 and st["timed_out"] == 0
+
+
+def test_solo_over_budget_request_still_dispatches():
+    """_pack_by_budget must always keep >= 1 request, or an over-budget
+    request would starve the queue forever."""
+    from repro.api import LatencyModel
+
+    done = {}
+    eng = SolveEngine(
+        m=10,
+        admission=api_mod.AdmissionPolicy(max_batch=8, max_wait_ms=0.0),
+        max_predicted_ms=1.0,  # everything is over budget
+        on_result=lambda rid, x: done.__setitem__(rid, x),
+        on_error=lambda rid, e: (_ for _ in ()).throw(e),
+    )
+    eng.set_latency_model(LatencyModel(coef=(100.0, 0.0, 0.0), samples=1))
+    eng.submit(SolveRequest(0, *_sys(60, 0)))
+    eng.submit(SolveRequest(1, *_sys(60, 1)))
+    while eng.pending():
+        eng.poll()
+    assert sorted(done) == [0, 1]
+    # Each rode alone: the budget trimmed every batch to the floor of one.
+    assert [pb["systems"] for pb in eng.stats_snapshot()["per_batch"]] == [1, 1]
+
+
+def test_dispatch_records_predicted_and_residual():
+    """With a model active and telemetry on, every observation carries the
+    pre-dispatch prediction, so predicted-vs-actual residuals are
+    observable."""
+    session = TridiagSession(
+        SolverConfig(m=10, max_batch=2, max_wait_ms=5.0, max_predicted_ms=500.0)
+    )
+    try:
+        session._engine.set_latency_model(_planted_model(7.5))
+        futs = [
+            session.submit(SolveRequest(rid, *_sys(60, rid))) for rid in (0, 1)
+        ]
+        for f in futs:
+            f.result(timeout=10.0)
+        snap = session.telemetry.snapshot()
+        assert len(snap) >= 1
+        for o in snap:
+            assert o.predicted_ms == 7.5
+            assert o.residual_ms == pytest.approx(o.latency_ms - 7.5)
+    finally:
+        session.close()
