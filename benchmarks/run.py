@@ -82,6 +82,7 @@ def main() -> None:
             dispatch_latency,
             ragged_throughput,
             serving_stress,
+            sharded_throughput,
         )
 
         slow = {
@@ -93,6 +94,11 @@ def main() -> None:
             "serving_stress": serving_stress.serving_stress,
             "arch_steps": arch_steps.arch_step_costs,
             "autotune_loop": autotune_loop.autotune_loop,
+            # Degenerates to the single-device baseline unless the process
+            # was started with XLA_FLAGS=--xla_force_host_platform_device_count
+            # (or on real multi-device hardware); run it standalone via
+            # `python -m benchmarks.sharded_throughput` for the full sweep.
+            "sharded_throughput": sharded_throughput.sharded_throughput,
         }
     benches.update(slow)
 

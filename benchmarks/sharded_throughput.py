@@ -1,0 +1,240 @@
+"""Sharded fused-solve throughput over a (device count × size × batch) grid.
+
+PR 10's tentpole maps the paper's "streams" onto *devices*: the fused
+partition solve shards its block axis (or, for wide batches, its lane axis)
+across a 1-D mesh under ``shard_map``, with one ``ppermute`` halo exchange
+and an ``all_gather`` of the reduced rows as the only collectives. This
+sweep times the same batch through ``TridiagSession`` at every device count
+(``mesh=None`` at 1 device — the unsharded baseline — and ``mesh=D``
+above), fp64-oracle-checked per cell.
+
+On this CPU container the "devices" are forced host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``, exported by this
+module's ``__main__`` guard before jax initialises) that *share the same
+cores*, so sharding cannot win wall-clock here — the numbers demonstrate
+wiring, parity and collective overhead, not speedup. The ``--smoke`` CI
+gate therefore asserts a **no-regression floor** plus oracle parity at
+every device count: sharded throughput must stay ≥ 0.9× the single-device
+baseline when the host has at least one core per device, and ≥ 0.9/D× when
+D devices oversubscribe the cores (D shards then time-slice plus pay
+rendezvous, so up to D× slowdown is the honest worst case; the relaxed
+floor still catches catastrophic regressions such as per-call recompiles).
+On a real multi-chip host the same sweep measures actual scaling under the
+strict floor.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run --only sharded_throughput
+  PYTHONPATH=src python -m benchmarks.sharded_throughput --smoke   # CI gate
+  PYTHONPATH=src python -m benchmarks.sharded_throughput \\
+      --json BENCH_pr10.json
+"""
+
+from __future__ import annotations
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+
+HEADER = [
+    "devices", "size", "batch", "num_chunks", "plan_shards", "ms_per_batch",
+    "systems_per_sec", "max_rel_err",
+]
+
+#: The smoke gate's throughput floor: sharding must not *regress* past
+#: collective overhead (no speedup claim). Applied strictly when the host
+#: has >= 1 core per device; divided by the device count when forced host
+#: devices oversubscribe the cores (see module docstring).
+SMOKE_FLOOR = 0.9
+
+
+def sharded_throughput(
+    device_counts=DEVICE_COUNTS,
+    sizes=(20_000, 100_000),
+    batches=(1, 8),
+    chunk_counts=(8,),
+    *,
+    m: int = 10,
+    reps: int = 3,
+    tol: float = 1e-10,
+):
+    """best-of-reps latency + systems/sec per (devices × size × batch) cell.
+
+    Device counts beyond the visible topology are skipped (the committed
+    ``BENCH_pr10.json`` is generated under the 8-host-device flag); every
+    cell's solution is checked against the per-system fp64 ``thomas_numpy``
+    oracle before it is timed — an off-oracle cell raises, it is not a data
+    point.
+    """
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core.tridiag.api import SolverConfig, TridiagSession
+    from repro.core.tridiag.reference import (
+        make_diag_dominant_system,
+        thomas_numpy,
+    )
+
+    prev_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        visible = jax.device_count()
+        rows = []
+        for n in sizes:
+            for batch in batches:
+                dl, d, du, b, _ = make_diag_dominant_system(
+                    n, seed=0, batch=(batch,)
+                )
+                refs = np.stack(
+                    [
+                        thomas_numpy(*(a[i] for a in (dl, d, du, b)))
+                        for i in range(batch)
+                    ]
+                )
+                for devices in device_counts:
+                    if devices > visible:
+                        continue
+                    for k in chunk_counts:
+                        cfg = SolverConfig(
+                            m=m,
+                            backend="reference",
+                            mesh=None if devices == 1 else devices,
+                            num_chunks=k,
+                        )
+                        with TridiagSession(cfg) as session:
+                            plan = session.plan_for((n,) * batch)
+                            x = session.solve_batched(dl, d, du, b)  # warmup
+                            err = float(
+                                np.max(np.abs(np.asarray(x) - refs))
+                                / (np.max(np.abs(refs)) + 1e-30)
+                            )
+                            if err > tol:
+                                raise RuntimeError(
+                                    f"sharded cell off fp64 oracle: "
+                                    f"devices={devices} n={n} B={batch} "
+                                    f"k={k} err={err:.2e}"
+                                )
+                            best = np.inf
+                            for _ in range(reps):
+                                t0 = time.perf_counter()
+                                session.solve_batched(dl, d, du, b)
+                                best = min(best, time.perf_counter() - t0)
+                        rows.append([
+                            devices, n, batch, plan.num_chunks, plan.shards,
+                            round(best * 1e3, 3), round(batch / best, 1),
+                            f"{err:.2e}",
+                        ])
+        return HEADER, rows
+    finally:
+        jax.config.update("jax_enable_x64", prev_x64)
+
+
+def _throughput_floor(rows, cores: int) -> list:
+    """(size, batch, devices) cells whose throughput fell below the floor
+    relative to the single-device baseline of the same (size, batch).
+
+    ``cores`` is the physical parallelism actually available: a D-device
+    cell gets the strict :data:`SMOKE_FLOOR` when ``cores >= D`` and the
+    oversubscription floor ``SMOKE_FLOOR / D`` otherwise.
+    """
+    base = {
+        (r[1], r[2]): r[6] for r in rows if r[0] == 1
+    }
+    failures = []
+    for r in rows:
+        devices = r[0]
+        if devices == 1:
+            continue
+        baseline = base.get((r[1], r[2]))
+        floor = SMOKE_FLOOR if cores >= devices else SMOKE_FLOOR / devices
+        if baseline and r[6] < floor * baseline:
+            failures.append(
+                f"devices={devices} n={r[1]} B={r[2]}: "
+                f"{r[6]:.1f}/s < {floor:.3f} x {baseline:.1f}/s"
+            )
+    return failures
+
+
+def main() -> None:
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny sweep (CI gate): oracle parity at every device count and "
+        f"sharded throughput >= {SMOKE_FLOOR}x the single-device baseline",
+    )
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="write the rows to PATH as JSON (the BENCH_pr10.json record)",
+    )
+    args = ap.parse_args()
+
+    if args.smoke:
+        header, rows = sharded_throughput(
+            sizes=(20_000,), batches=(1, 8), chunk_counts=(8,), reps=2
+        )
+    else:
+        header, rows = sharded_throughput()
+    print(",".join(str(h) for h in header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+    if args.json:
+        import datetime
+
+        import jax
+
+        payload = {
+            "meta": {
+                "generated_at": datetime.datetime.now(datetime.timezone.utc)
+                .isoformat(timespec="seconds"),
+                "jax_backend": jax.default_backend(),
+                "devices": jax.device_count(),
+            },
+            "benches": {"sharded_throughput": {"header": header, "rows": rows}},
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(rows)} rows to {args.json}")
+
+    if args.smoke:
+        import jax
+
+        if jax.device_count() < 2:
+            raise SystemExit(
+                "smoke needs a multi-device topology; run via "
+                "python -m benchmarks.sharded_throughput (the __main__ guard "
+                "forces 8 host devices) or export XLA_FLAGS"
+            )
+        sharded_devices = {r[0] for r in rows if r[0] > 1}
+        if not sharded_devices:
+            raise SystemExit("smoke sweep produced no sharded cells")
+        cores = os.cpu_count() or 1
+        failures = _throughput_floor(rows, cores)
+        if failures:
+            raise SystemExit(
+                "sharded_throughput smoke FAILED (throughput floor): "
+                + "; ".join(failures)
+            )
+        print(
+            f"SMOKE OK: {len(rows)} oracle-checked cells, sharded at "
+            f"devices={sorted(sharded_devices)}, all above the "
+            f"{SMOKE_FLOOR} throughput floor ({cores} core(s))"
+        )
+
+
+if __name__ == "__main__":
+    import os
+
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{_flags} --xla_force_host_platform_device_count=8".strip()
+        )
+    main()

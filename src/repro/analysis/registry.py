@@ -160,6 +160,7 @@ _PLAN_PY = "repro/core/tridiag/plan.py"
 _API_PY = "repro/core/tridiag/api.py"
 _TELEMETRY_RING_PY = "repro/telemetry/ring.py"
 _TELEMETRY_REFIT_PY = "repro/telemetry/refit.py"
+_PARALLEL_SOLVER_PY = "repro/parallel/solver.py"
 
 DEFAULT_REGISTRY = Registry(
     guarded_globals=(
@@ -179,6 +180,13 @@ DEFAULT_REGISTRY = Registry(
                 "_WIDE_STAGE3_CACHE",
             ),
             guards=("_CACHE_LOCK",),
+        ),
+        # The mesh memo is populated from caller and serving-worker threads
+        # alike whenever a sharded executable is (re)built.
+        GuardedGlobals(
+            module=_PARALLEL_SOLVER_PY,
+            names=("_MESH_CACHE",),
+            guards=("_MESH_LOCK",),
         ),
     ),
     guarded_attrs=(

@@ -92,6 +92,24 @@ donation still applies to the caller-visible operands). ``"auto"`` (default)
 interleaves wide flat fused batches (B ≥ ``layout.AUTO_INTERLEAVE_MIN_BATCH``
 systems, bounded padding waste) and stays system-major otherwise.
 
+Multi-device execution (``SolverConfig.mesh``)
+----------------------------------------------
+The fused solve shards across a device mesh (``repro.parallel.solver`` owns
+the mesh plumbing): ``mesh = None | "auto" | <count> | Mesh | devices``. On
+the system-major layout the fused block axis splits over a ``"chunks"`` mesh
+axis — plans are built shard-aligned, stage 1/stage 3 run per-shard under
+``shard_map`` after a one-block ``ppermute`` halo exchange, and only the
+tiny reduced system is gathered (``all_gather`` of per-shard reduced rows,
+replicated device Thomas solve). On the interleaved layout the lane axis
+splits over a ``"batch"`` axis with no collectives, and the ``"auto"``
+interleave threshold counts per-shard lanes. Sharded executables are cached
+under the device-set signature; ``mesh`` composes with ``dispatch="fused"``
+/ ``"auto"`` only (the staged path is the per-chunk measurement harness),
+and ``mesh=None`` stays bit-identical to the single-device build. CPU rigs
+exercise the whole path under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (``tests/conftest
+.py``, ``benchmarks/sharded_throughput.py``).
+
 Checked invariants
 ------------------
 This package's concurrency and donation contracts are machine-checked:

@@ -109,6 +109,11 @@ from repro.core.tridiag.plan import (
     set_plan_cache_capacity,
 )
 from repro.core.tridiag.ragged import System, fuse_ragged, split_ragged
+from repro.parallel.solver import (
+    mesh_signature,
+    resolve_mesh_devices,
+    shard_count,
+)
 from repro.telemetry.refit import AUTOTUNE_MODES, OnlineRefitter
 from repro.telemetry.ring import BatchObservation, TelemetryBuffer
 
@@ -264,6 +269,24 @@ class SolverConfig:
                    B ≥ ``layout.AUTO_INTERLEAVE_MIN_BATCH`` with bounded
                    ragged padding, system-major otherwise. Layout conversion
                    is traced into the executable — callers never see it.
+    ``mesh``       device mesh for sharded fused execution: ``None`` (default
+                   — single device, today's path bit for bit), ``"auto"``
+                   (shard whenever more than one device is visible), an int
+                   device count, a 1-D ``jax.sharding.Mesh``, or an explicit
+                   device sequence (see
+                   :func:`repro.parallel.solver.resolve_mesh_devices`).
+                   Sharded sessions build shard-aligned plans (chunk bounds
+                   snapped to shard boundaries) and run stage 1/stage 3
+                   per-shard under ``shard_map`` with only the reduced
+                   system gathered. Requires a fused dispatch mode: a mesh
+                   with ``dispatch="staged"`` is rejected by
+                   :meth:`validate`; under ``dispatch="auto"`` the
+                   ``*_timed`` verbs keep their staged single-device path
+                   (phase timing is structurally per-chunk, not per-shard)
+                   while the plain verbs and the serving path shard. On CPU
+                   hosts, export
+                   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+                   before jax initialises to get an 8-device mesh.
     ``policy``     a :class:`~repro.core.tridiag.plan.ChunkPolicy` pricing
                    each dispatch (e.g. ``HeuristicChunkPolicy(fitted)``), or
                    None to use the fixed ``num_chunks``.
@@ -324,6 +347,7 @@ class SolverConfig:
     backend: BackendLike = "auto"
     dispatch: str = "auto"
     layout: str = "auto"
+    mesh: Any = None
     policy: Optional[ChunkPolicy] = None
     num_chunks: Optional[int] = None
     max_batch: int = 64
@@ -372,6 +396,16 @@ class SolverConfig:
                 f"('auto' = interleaved for wide fused batches, system-major "
                 f"otherwise)"
             )
+        if self.mesh is not None:
+            if self.dispatch == "staged":
+                raise ValueError(
+                    f"mesh={self.mesh!r} with dispatch='staged': the staged "
+                    f"path dispatches chunks from a host loop on one device "
+                    f"and cannot shard; use dispatch='fused', or 'auto' "
+                    f"(sharded plain verbs, staged single-device *_timed "
+                    f"verbs)"
+                )
+            resolve_mesh_devices(self.mesh)  # raises on a bad spec
         if self.policy is not None:
             if not isinstance(self.policy, ChunkPolicy):
                 raise TypeError(
@@ -595,6 +629,7 @@ class SolveEngine:
         dtype: Any = None,
         dispatch: str = "auto",
         layout: str = "auto",
+        mesh: Any = None,
         max_queue: Optional[int] = None,
         on_result: Optional[Callable[[int, np.ndarray], None]] = None,
         on_error: Optional[Callable[[int, BaseException], None]] = None,
@@ -622,6 +657,7 @@ class SolveEngine:
         self.dtype = dtype
         self.dispatch = dispatch
         self.layout = layout
+        self.mesh_devices = resolve_mesh_devices(mesh) if dispatch != "staged" else None
         self._eager = eager
         self._clock = clock
         # Serving dispatches are plain solves (no phase breakdown consumed),
@@ -636,7 +672,9 @@ class SolveEngine:
             self._executor = (
                 PlanExecutor(backend=backend, layout=layout)
                 if dispatch == "staged"
-                else FusedExecutor(backend=backend, layout=layout)
+                else FusedExecutor(
+                    backend=backend, layout=layout, mesh=self.mesh_devices
+                )
             )
         self._on_result = on_result
         self._on_error = on_error
@@ -993,6 +1031,16 @@ class SolveEngine:
         return self._drain()
 
     # -- execution -----------------------------------------------------------
+    def plan_shards(self, sizes: Sequence[int]) -> int:
+        """Shard count for a batch's plan: the largest divisor of the fused
+        block axis within the mesh's device budget, or 1 without a mesh.
+        Shard-aligned plans are harmless on the unsharded/staged paths, so
+        one plan serves every executor this engine may route to."""
+        if self.mesh_devices is None:
+            return 1
+        num_blocks = effective_size(tuple(sizes)) // self.m
+        return shard_count(num_blocks, len(self.mesh_devices))
+
     def _drain(self) -> Dict[int, np.ndarray]:
         out, self._results = self._results, {}
         return out
@@ -1033,11 +1081,15 @@ class SolveEngine:
             # dispatches, and this batch must be priced (and recorded) by
             # exactly one of the two.
             policy = self.policy
+            shards = self.plan_shards(sizes)
             if policy is not None:
-                plan = build_plan(sizes, self.m, policy=policy)
+                plan = build_plan(sizes, self.m, policy=policy, shards=shards)
             else:
                 plan = build_plan(
-                    sizes, self.m, num_chunks=self.pick_chunks_ragged(sizes)
+                    sizes,
+                    self.m,
+                    num_chunks=self.pick_chunks_ragged(sizes),
+                    shards=shards,
                 )
             model = self.latency_model()
             predicted_ms = (
@@ -1094,6 +1146,11 @@ class SolveEngine:
                                 sizes,
                                 self.m,
                                 fused=self.dispatch != "staged",
+                                batch_shards=(
+                                    shard_count(len(sizes), len(self.mesh_devices))
+                                    if self.mesh_devices is not None
+                                    else 1
+                                ),
                             ),
                             dispatch=(
                                 "staged" if self.dispatch == "staged" else "fused"
@@ -1168,8 +1225,15 @@ class TridiagSession:
     ) -> None:
         self.config = (SolverConfig() if config is None else config).validate()
         self.backend = resolve_backend(self.config.backend)
+        # Resolved once: every executor, plan and stats report sees the same
+        # device set even if jax's visible devices change later.
+        self._mesh_devices = resolve_mesh_devices(self.config.mesh)
         self._executor = PlanExecutor(backend=self.backend, layout=self.config.layout)
-        self._fused = FusedExecutor(backend=self.backend, layout=self.config.layout)
+        self._fused = FusedExecutor(
+            backend=self.backend,
+            layout=self.config.layout,
+            mesh=self._mesh_devices,
+        )
         if self.config.plan_cache_capacity is not None:
             set_plan_cache_capacity(self.config.plan_cache_capacity)
         # RLock-backed so _resolve_future can take it from paths that
@@ -1216,6 +1280,7 @@ class TridiagSession:
             dtype=self.config.dtype,
             dispatch=self.config.dispatch,
             layout=self.config.layout,
+            mesh=self._mesh_devices,
             max_queue=self.config.max_queue,
             on_result=lambda rid, x: self._resolve_future(rid, value=x),
             on_error=lambda rid, e: self._resolve_future(rid, error=e),
@@ -1228,12 +1293,28 @@ class TridiagSession:
         """The plan this session executes for ``sizes`` (int or sequence).
 
         Priced by the *active* chunk policy — the config's, until a
-        live-mode refit swaps in the telemetry-fitted one."""
+        live-mode refit swaps in the telemetry-fitted one. With a mesh
+        configured, plans are shard-aligned (chunk bounds snapped to shard
+        boundaries); the staged ``*_timed`` path runs the same plan on one
+        device, so both executors agree on the chunk layout."""
         with self._cv:
             policy = self._active_policy
+        shards = self._plan_shards(sizes)
         if policy is not None:
-            return build_plan(sizes, self.config.m, policy=policy)
-        return build_plan(sizes, self.config.m, num_chunks=self.config.num_chunks or 1)
+            return build_plan(sizes, self.config.m, policy=policy, shards=shards)
+        return build_plan(
+            sizes,
+            self.config.m,
+            num_chunks=self.config.num_chunks or 1,
+            shards=shards,
+        )
+
+    def _plan_shards(self, sizes: Sizes) -> int:
+        """Shard count for this session's plans (1 without a mesh)."""
+        if self._mesh_devices is None:
+            return 1
+        num_blocks = effective_size(sizes) // self.config.m
+        return shard_count(num_blocks, len(self._mesh_devices))
 
     def _cast(self, *arrays: Any) -> Tuple[Any, ...]:
         if self.config.dtype is None:
@@ -1556,13 +1637,25 @@ class TridiagSession:
         :mod:`repro.core.tridiag.plan`, and the closed-loop ``autotune``
         block — refit attempts/runs/errors, last-refit age, the
         shadow-vs-live pick agreement counters, and the telemetry ring's
-        recorded/dropped/buffered observation counts.
+        recorded/dropped/buffered observation counts. ``mesh`` reports the
+        active device mesh (None on the single-device path; otherwise the
+        device count, platform and device-id signature sharded executables
+        run under).
         """
         with self._cv:
             snap = self._engine.stats_snapshot()
             snap["unresolved"] = len(self._futures)
         snap["plan_cache"] = plan_cache_stats()
         snap["executable_cache"] = executable_cache_stats()
+        snap["mesh"] = (
+            None
+            if self._mesh_devices is None
+            else {
+                "devices": len(self._mesh_devices),
+                "platform": self._mesh_devices[0].platform,
+                "signature": mesh_signature(self._mesh_devices),
+            }
+        )
         autotune: Dict[str, Any] = (
             self._refitter.stats_snapshot()
             if self._refitter is not None

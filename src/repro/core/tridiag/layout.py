@@ -68,6 +68,7 @@ def resolve_layout(
     *,
     fused: bool,
     lead_ndim: int = 0,
+    batch_shards: int = 1,
 ) -> str:
     """Resolve a config layout to a concrete one for a given batch.
 
@@ -76,9 +77,17 @@ def resolve_layout(
     interleave transforms are defined on flat fused operands only, so
     stacked inputs always stay system-major — explicitly requesting
     ``"interleaved"`` for them is an error rather than a silent fallback.
+
+    ``batch_shards`` is the lane-axis shard count a mesh-configured executor
+    would split the batch over: the ``"auto"`` threshold compares the
+    *per-shard* lane count (each device's wide grid only ever sees
+    ``B / batch_shards`` systems), so turning a mesh on can't silently flip
+    a mid-sized batch into lanes too narrow to pay for the gathers.
     """
     if layout not in LAYOUTS:
         raise ValueError(f"layout must be one of {LAYOUTS}, got {layout!r}")
+    if batch_shards < 1:
+        raise ValueError(f"batch_shards must be >= 1, got {batch_shards}")
     if layout == "system-major":
         return "system-major"
     if layout == "interleaved":
@@ -93,7 +102,7 @@ def resolve_layout(
     if lead_ndim or not fused:
         return "system-major"
     bsz = len(sizes)
-    if bsz < AUTO_INTERLEAVE_MIN_BATCH:
+    if bsz // batch_shards < AUTO_INTERLEAVE_MIN_BATCH:
         return "system-major"
     total = sum(sizes)
     padded = max(n // m for n in sizes) * m * bsz

@@ -42,9 +42,10 @@ module-wide per ``(m, backend)``.
 
 Plan cache
 ----------
-``build_plan`` memoises plans by their ``(sizes, m, num_chunks)`` signature
-(bounded LRU): serving traffic repeats batch compositions, and a plan is a
-pure function of its signature, so repeated dispatches skip replanning.
+``build_plan`` memoises plans by their ``(sizes, m, num_chunks, shards)``
+signature (bounded LRU): serving traffic repeats batch compositions, and a
+plan is a pure function of its signature, so repeated dispatches skip
+replanning.
 ``plan_cache_stats()`` / ``clear_plan_cache()`` expose hit/miss counters for
 tests and capacity planning; ``set_plan_cache_capacity()`` resizes the LRU
 (``SolverConfig.plan_cache_capacity`` threads it through the facade).
@@ -79,6 +80,19 @@ are copied to device per call and are always safe to reuse).
 and the serving path, staged for the ``*_timed`` verbs so measurement
 campaigns keep their phase breakdown.
 
+Sharded dispatch
+----------------
+``SolverConfig.mesh`` (threaded through to ``FusedExecutor(mesh=...)``)
+shards the fused executable across a 1-D device mesh: shard-aligned plans
+(``build_plan(..., shards=S)``) split the block axis into equal per-device
+spans, stage 1 and stage 3 run per-shard under ``shard_map`` with one
+``ppermute`` halo exchange, and only the reduced system is gathered
+(``all_gather`` of the per-shard reduced rows + a replicated device Stage-2
+solve). Interleaved executables shard the lane axis instead, with no
+collectives at all. See :func:`_sharded_fused_callable` and
+:mod:`repro.parallel.solver`; the staged :class:`PlanExecutor` never shards
+(its raison d'être is per-phase timing on one device).
+
 Both module-level caches (plans and jitted stages) are lock-protected:
 ``TridiagSession.submit`` solves from a worker thread while the session's
 synchronous verbs run on the caller's thread, so two threads legitimately
@@ -98,12 +112,22 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 
 from repro.core.tridiag import layout as layout_mod
 from repro.core.tridiag import partition
 from repro.core.tridiag.layout import resolve_layout
 from repro.core.tridiag.reference import thomas_numpy
 from repro.core.tridiag.thomas import thomas as thomas_scan
+from repro.parallel.compat import shard_map
+from repro.parallel.solver import (
+    MESH_AXIS_BATCH,
+    MESH_AXIS_CHUNKS,
+    mesh_for,
+    mesh_signature,
+    resolve_mesh_devices,
+    shard_count,
+)
 
 Sizes = Union[int, Sequence[int]]
 
@@ -535,6 +559,15 @@ class SolvePlan:
     right halo block (the reduced row of a chunk's last block references the
     next block's spikes); ``offsets`` is the per-system element offset table
     (length B+1) used to split the fused solution back apart.
+
+    ``shards`` is the shard-aligned mode (``build_plan(..., shards=S)``): the
+    block axis is split into ``S`` equal spans (``S`` divides ``num_blocks``
+    and ``num_chunks``), every span boundary coincides with a chunk boundary,
+    and every span carries the same chunk layout — so a device mesh can own
+    one span per device, the halo map degenerates to one per-shard exchange
+    (each shard needs only the *next* shard's first block), and the in-shard
+    chunk loop is the same static program on every device
+    (:attr:`local_chunk_bounds`). ``shards=1`` is today's unsharded plan.
     """
 
     m: int
@@ -542,6 +575,7 @@ class SolvePlan:
     chunk_bounds: Tuple[Tuple[int, int], ...]
     halo_bounds: Tuple[Tuple[int, int], ...]
     offsets: Tuple[int, ...]
+    shards: int = 1
 
     @property
     def batch(self) -> int:
@@ -563,6 +597,20 @@ class SolvePlan:
     def effective_size(self) -> int:
         return self.total_size
 
+    @property
+    def blocks_per_shard(self) -> int:
+        return self.num_blocks // self.shards
+
+    @property
+    def local_chunk_bounds(self) -> Tuple[Tuple[int, int], ...]:
+        """One shard's chunk bounds, relative to the shard's first block.
+
+        Valid by construction (shard-aligned plans repeat the same chunk
+        layout in every shard), so the sharded executor traces one static
+        in-shard chunk loop that is correct on every device.
+        """
+        return self.chunk_bounds[: self.num_chunks // self.shards]
+
 
 # ------------------------------------------------------------- plan cache --
 # Plans are pure functions of their (sizes, m, num_chunks) signature, and
@@ -571,7 +619,9 @@ class SolvePlan:
 # capacity bounds memory for adversarial traffic with no repeated mixes;
 # 1024 distinct compositions is far beyond any steady-state queue.
 _PLAN_CACHE_CAPACITY = 1024
-_PLAN_CACHE: "OrderedDict[Tuple[Tuple[int, ...], int, int], SolvePlan]" = OrderedDict()
+_PLAN_CACHE: "OrderedDict[Tuple[Tuple[int, ...], int, int, int], SolvePlan]" = (
+    OrderedDict()
+)
 _PLAN_STATS = {"hits": 0, "misses": 0}
 
 
@@ -612,6 +662,7 @@ def build_plan(
     *,
     num_chunks: Optional[int] = None,
     policy: Optional[ChunkPolicy] = None,
+    shards: int = 1,
 ) -> SolvePlan:
     """Build the :class:`SolvePlan` for a batch of systems of ``sizes``.
 
@@ -625,9 +676,18 @@ def build_plan(
     is still a caller error. Blocks are split as evenly as possible
     (remainder blocks go to the leading chunks).
 
-    Plans are memoised by their ``(sizes, m, num_chunks)`` signature in a
-    bounded module-level LRU (policies are consulted first, then the resolved
-    count keys the cache), so serving traffic that repeats a batch
+    ``shards`` requests the shard-aligned mode for mesh execution: the count
+    is snapped down to the largest divisor of ``num_blocks`` within the
+    request (so an 8-device mesh over a prime block count degrades to the
+    unsharded plan instead of erroring), the chunk count is snapped to a
+    multiple of the shard count (every shard gets the same number of chunks,
+    every shard boundary is a chunk boundary), and the plan records the
+    result in :attr:`SolvePlan.shards`. ``shards=1`` (the default) is
+    exactly today's layout.
+
+    Plans are memoised by their ``(sizes, m, num_chunks, shards)`` signature
+    in a bounded module-level LRU (policies are consulted first, then the
+    resolved counts key the cache), so serving traffic that repeats a batch
     composition skips replanning; see :func:`plan_cache_stats`.
     """
     if isinstance(sizes, (int, np.integer)):
@@ -651,10 +711,22 @@ def build_plan(
         if k < 1:
             raise ValueError("num_chunks must be >= 1")
 
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+
     num_blocks = sum(sizes) // m
     k = min(k, num_blocks)
+    # Shard-aligned mode: snap the shard count to a divisor of the block
+    # axis (shard_map needs equal spans), then snap the chunk count to a
+    # multiple of it so every span boundary is a chunk boundary and every
+    # span repeats the same in-shard chunk layout.
+    shards = shard_count(num_blocks, int(shards))
+    if shards > 1:
+        per_shard_blocks = num_blocks // shards
+        per_shard_chunks = max(1, min(per_shard_blocks, round(k / shards)))
+        k = per_shard_chunks * shards
 
-    key = (sizes, m, k)
+    key = (sizes, m, k, shards)
     with _CACHE_LOCK:
         cached = _PLAN_CACHE.get(key)
         if cached is not None:
@@ -663,12 +735,28 @@ def build_plan(
             return cached
         _PLAN_STATS["misses"] += 1
 
-    chunk_sizes = [num_blocks // k + (1 if i < num_blocks % k else 0) for i in range(k)]
     bounds: List[Tuple[int, int]] = []
-    start = 0
-    for s in chunk_sizes:
-        bounds.append((start, start + s))
-        start += s
+    if shards > 1:
+        # k/shards chunks over num_blocks/shards blocks, repeated per shard:
+        # identical local layout on every shard by construction.
+        cps = k // shards
+        local_sizes = [
+            per_shard_blocks // cps + (1 if i < per_shard_blocks % cps else 0)
+            for i in range(cps)
+        ]
+        start = 0
+        for _ in range(shards):
+            for s in local_sizes:
+                bounds.append((start, start + s))
+                start += s
+    else:
+        chunk_sizes = [
+            num_blocks // k + (1 if i < num_blocks % k else 0) for i in range(k)
+        ]
+        start = 0
+        for s in chunk_sizes:
+            bounds.append((start, start + s))
+            start += s
     halos = tuple((lo, min(hi + 1, num_blocks)) for lo, hi in bounds)
 
     offsets = [0]
@@ -680,6 +768,7 @@ def build_plan(
         chunk_bounds=tuple(bounds),
         halo_bounds=halos,
         offsets=tuple(offsets),
+        shards=shards,
     )
     with _CACHE_LOCK:
         # A racing thread may have built the same plan between the lookup and
@@ -957,12 +1046,115 @@ def _trim_halo(c: partition.PartitionCoeffs, nb: int) -> partition.PartitionCoef
     )
 
 
+def _sharded_fused_callable(
+    plan: SolvePlan,
+    backend: StageBackend,
+    mesh_devices: Sequence[Any],
+) -> Callable:
+    """The sharded system-major trace: stage 1 + stage 3 under ``shard_map``.
+
+    The fused block axis shards contiguously over the mesh's ``"chunks"``
+    axis (one shard-aligned span per device, ``plan.shards`` devices). The
+    only cross-device traffic is what the algorithm structurally requires:
+
+    * one ``ppermute`` halo exchange — each shard sends its *first* block's
+      operands to the previous shard, closing the right-neighbour reference
+      of every span's last reduced row;
+    * one ``all_gather`` of the per-shard reduced rows, after which every
+      device runs the (tiny, replicated) Stage-2 solve locally and slices
+      out its own interface unknowns — the "scatter" is a local
+      ``dynamic_slice`` of the replicated solution, not a collective.
+
+    The last shard's halo arrives as ``ppermute`` zeros and is patched into
+    an exact identity block (``dl=0, d=1, du=0, b=0`` → spikes are exact
+    zeros), which reproduces the unsharded trace's end-of-axis zero-pad
+    convention bit for bit. In-shard chunking follows
+    ``plan.local_chunk_bounds`` — the same static loop on every device.
+    """
+    m = plan.m
+    num_shards = plan.shards
+    bps = plan.blocks_per_shard
+    local_bounds = plan.local_chunk_bounds
+    stage1, _ = jitted_stages(m, backend)
+    stage3_ghost = jitted_stage3_ghost(backend)
+    reduced_solve = backend.make_reduced_solve()
+
+    def per_shard(dl: Any, d: Any, du: Any, b: Any) -> Any:
+        idx = jax.lax.axis_index(MESH_AXIS_CHUNKS)
+        perm = [(i, i - 1) for i in range(1, num_shards)]
+        halo = [
+            jax.lax.ppermute(a[:m], MESH_AXIS_CHUNKS, perm)
+            for a in (dl, d, du, b)
+        ]
+        # ppermute delivers zeros to the shard nobody sends to (the last):
+        # patch its halo diagonal to 1 so the halo is an exact identity
+        # block, matching the unsharded end-of-axis convention exactly.
+        halo[1] = jnp.where(
+            idx == num_shards - 1, jnp.ones_like(halo[1]), halo[1]
+        )
+        ext = [jnp.concatenate([a, h]) for a, h in zip((dl, d, du, b), halo)]
+
+        coeffs = []
+        for lo, hi in local_bounds:
+            def sl(a: Any, lo: int = lo, hi: int = hi) -> Any:
+                # every local chunk has a halo block in ext (the in-shard
+                # next block, or the exchanged/patched halo for the last)
+                return jax.lax.slice_in_dim(a, lo * m, (hi + 1) * m, axis=-1)
+
+            coeffs.append(
+                _trim_halo(stage1(sl(ext[0]), sl(ext[1]), sl(ext[2]), sl(ext[3])), hi - lo)
+            )
+        red_local = [
+            jnp.concatenate([getattr(c, f) for c in coeffs], axis=-1)
+            if len(coeffs) > 1
+            else getattr(coeffs[0], f)
+            for f in ("red_dl", "red_d", "red_du", "red_b")
+        ]
+        red = [
+            jax.lax.all_gather(r, MESH_AXIS_CHUNKS, tiled=True)
+            for r in red_local
+        ]
+        s = reduced_solve(*red)  # replicated (P,) solve on every device
+
+        base = idx * bps
+        outs = []
+        for (lo, hi), c in zip(local_bounds, coeffs):
+            s_chunk = jax.lax.dynamic_slice_in_dim(s, base + lo, hi - lo, axis=-1)
+            if lo == 0:
+                # shard 0's first chunk has no left neighbour; elsewhere the
+                # (clamped) slice start base - 1 is exact for every idx > 0.
+                s_left = jnp.where(
+                    idx == 0,
+                    jnp.zeros_like(s[..., :1]),
+                    jax.lax.dynamic_slice_in_dim(
+                        s, jnp.maximum(base - 1, 0), 1, axis=-1
+                    ),
+                )
+            else:
+                s_left = jax.lax.dynamic_slice_in_dim(
+                    s, base + lo - 1, 1, axis=-1
+                )
+            outs.append(stage3_ghost(c, s_chunk, s_left))
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+
+    mesh = mesh_for(mesh_devices, MESH_AXIS_CHUNKS)
+    pspec = PartitionSpec(MESH_AXIS_CHUNKS)
+    return shard_map(
+        per_shard,
+        mesh=mesh,
+        in_specs=(pspec,) * 4,
+        out_specs=pspec,
+        check_vma=False,
+    )
+
+
 def _fused_callable(
     plan: SolvePlan,
     backend: StageBackend,
     donate: bool,
     avals: Sequence[jax.ShapeDtypeStruct],
     layout: str = "system-major",
+    mesh_devices: Optional[Sequence[Any]] = None,
 ) -> Callable:
     """Trace + AOT-compile the whole three-stage solve for ``plan``.
 
@@ -982,6 +1174,15 @@ def _fused_callable(
     chunk partition does not apply on this path (the wide grid is the
     parallel axis); the plan still keys the plan/executable caches.
 
+    ``mesh_devices`` (a device tuple) shards the trace across a 1-D mesh:
+    on the system-major layout the fused block axis shards over a
+    ``"chunks"`` axis of ``plan.shards`` devices
+    (:func:`_sharded_fused_callable`); on the interleaved layout the lane
+    axis shards over a ``"batch"`` axis — the wide pipeline needs no
+    collectives at all (each device owns whole systems), so only the
+    interleave/deinterleave gathers bracket the ``shard_map`` region.
+    ``None`` (the default) is the single-device trace, unchanged.
+
     Compilation happens HERE (``jit(...).lower(*avals).compile()``), not at
     first call: only one of the four donated buffers can back the single
     output, so XLA warns "Some donated buffers were not usable" once per
@@ -997,12 +1198,28 @@ def _fused_callable(
         wide_stage1, wide_stage3 = jitted_wide_stages(m, backend)
         wide_reduced = backend.make_wide_reduced_solve()
 
-        def fused(dl: Any, d: Any, du: Any, b: Any) -> Any:
-            ops = layout_mod.interleave_operands(dl, d, du, b, sizes, m)
+        def wide_pipeline(*ops: Any) -> Any:
             c = wide_stage1(*ops)
             s = wide_reduced(c.red_dl, c.red_d, c.red_du, c.red_b)
-            xw = wide_stage3(c, s)
+            return wide_stage3(c, s)
+
+        if mesh_devices is not None:
+            lane_spec = PartitionSpec(None, None, MESH_AXIS_BATCH)
+            wide_pipeline = shard_map(
+                wide_pipeline,
+                mesh=mesh_for(mesh_devices, MESH_AXIS_BATCH),
+                in_specs=(lane_spec,) * 4,
+                out_specs=lane_spec,
+                check_vma=False,
+            )
+
+        def fused(dl: Any, d: Any, du: Any, b: Any) -> Any:
+            ops = layout_mod.interleave_operands(dl, d, du, b, sizes, m)
+            xw = wide_pipeline(*ops)
             return layout_mod.deinterleave(xw, sizes, m)
+
+    elif mesh_devices is not None:
+        fused = _sharded_fused_callable(plan, backend, mesh_devices)
 
     else:
         stage1, _ = jitted_stages(m, backend)
@@ -1071,10 +1288,21 @@ class FusedExecutor:
 
     ``layout`` ("system-major" | "interleaved" | "auto", default "auto")
     picks the operand layout traced into the executable; "auto" interleaves
-    flat fused batches of ≥ `layout.AUTO_INTERLEAVE_MIN_BATCH` systems (see
-    :func:`repro.core.tridiag.layout.resolve_layout`). The resolved layout
-    is part of the executable-cache key — distinct layouts never share an
-    executable.
+    flat fused batches of ≥ `layout.AUTO_INTERLEAVE_MIN_BATCH` systems *per
+    shard* (see :func:`repro.core.tridiag.layout.resolve_layout`). The
+    resolved layout is part of the executable-cache key — distinct layouts
+    never share an executable.
+
+    ``mesh`` (any :func:`repro.parallel.solver.resolve_mesh_devices` spec;
+    default ``None``) shards the traced solve across a 1-D device mesh:
+    system-major executables shard the fused block axis over ``plan.shards``
+    devices (so pass a shard-aligned plan, ``build_plan(..., shards=...)``),
+    interleaved executables shard the lane axis over the largest device
+    count dividing the batch. Only 1-D fused operands shard (extra leading
+    batch dims fall back to the single-device trace), and ``mesh=None``
+    traces bit-identically to today's path. The mesh signature of the
+    devices actually used joins the executable-cache key, so sharded and
+    unsharded executables (or different device sets) never collide.
 
     Executables are cached in the module-level LRU (`executable_cache_stats`)
     under `_CACHE_LOCK`, so sessions can hit it from caller + worker threads.
@@ -1086,6 +1314,7 @@ class FusedExecutor:
         *,
         donate: bool = True,
         layout: str = "auto",
+        mesh: Any = None,
     ) -> None:
         self.backend = resolve_backend(backend)
         self.donate = donate
@@ -1094,20 +1323,43 @@ class FusedExecutor:
                 f"layout must be one of {layout_mod.LAYOUTS}, got {layout!r}"
             )
         self.layout = layout
+        self.mesh_devices = resolve_mesh_devices(mesh)
+
+    def _shard_devices(
+        self, plan: SolvePlan, layout: str, lead_ndim: int
+    ) -> Optional[Tuple[Any, ...]]:
+        """The devices this executable shards over (None = single-device)."""
+        if self.mesh_devices is None or lead_ndim != 0:
+            return None
+        if layout == "interleaved":
+            lanes = shard_count(len(plan.sizes), len(self.mesh_devices))
+            return self.mesh_devices[:lanes] if lanes > 1 else None
+        if 1 < plan.shards <= len(self.mesh_devices):
+            return self.mesh_devices[: plan.shards]
+        return None
 
     def _executable(self, plan: SolvePlan, ops: Sequence) -> Callable:
+        lead_ndim = ops[1].ndim - 1
+        batch_shards = (
+            shard_count(len(plan.sizes), len(self.mesh_devices))
+            if self.mesh_devices is not None and lead_ndim == 0
+            else 1
+        )
         layout = resolve_layout(
             self.layout,
             plan.sizes,
             plan.m,
             fused=True,
-            lead_ndim=ops[1].ndim - 1,
+            lead_ndim=lead_ndim,
+            batch_shards=batch_shards,
         )
+        shard_devices = self._shard_devices(plan, layout, lead_ndim)
         key = (
             plan,
             self.backend,
             self.donate,
             layout,
+            mesh_signature(shard_devices),
             tuple(np.dtype(jax.dtypes.canonicalize_dtype(a.dtype)).name for a in ops),
             tuple(a.shape[:-1] for a in ops),
         )
@@ -1125,7 +1377,9 @@ class FusedExecutor:
             jax.ShapeDtypeStruct(a.shape, jax.dtypes.canonicalize_dtype(a.dtype))
             for a in ops
         ]
-        fn = _fused_callable(plan, self.backend, self.donate, avals, layout)
+        fn = _fused_callable(
+            plan, self.backend, self.donate, avals, layout, shard_devices
+        )
         with _CACHE_LOCK:
             existing = _EXEC_CACHE.get(key)
             if existing is not None:

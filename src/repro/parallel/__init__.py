@@ -1,6 +1,23 @@
-"""Distribution: mesh context, sharding rules, and overlap-tuned collectives."""
+"""Distribution: mesh context, sharding rules, overlap-tuned collectives,
+and the solver-facing mesh plumbing for the sharded fused tridiagonal solve
+(:mod:`repro.parallel.solver`)."""
 
 from repro.parallel.ctx import ParallelCtx
 from repro.parallel.sharding import param_specs, batch_spec, make_train_shardings
+from repro.parallel.solver import (
+    MeshSpec,
+    mesh_signature,
+    resolve_mesh_devices,
+    shard_count,
+)
 
-__all__ = ["ParallelCtx", "param_specs", "batch_spec", "make_train_shardings"]
+__all__ = [
+    "MeshSpec",
+    "ParallelCtx",
+    "batch_spec",
+    "make_train_shardings",
+    "mesh_signature",
+    "param_specs",
+    "resolve_mesh_devices",
+    "shard_count",
+]

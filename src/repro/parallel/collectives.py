@@ -15,7 +15,7 @@ interleave them with remaining backward compute.
 
 from __future__ import annotations
 
-from typing import Any, Callable, List, Sequence, Tuple
+from typing import Any, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,10 @@ def plan_buckets(
 ) -> List[List[int]]:
     """Greedy size-balanced assignment of param leaves to buckets."""
     leaves = jax.tree.leaves(params_shape)
-    sizes = [int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize for l in leaves]
+    sizes = [
+        int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        for leaf in leaves
+    ]
     order = sorted(range(len(leaves)), key=lambda i: -sizes[i])
     buckets: List[List[int]] = [[] for _ in range(n_buckets)]
     loads = [0] * n_buckets
@@ -52,7 +55,10 @@ def tuned_bucket_count(
     """Paper-heuristic bucket count for this parameter set."""
     leaves = jax.tree.leaves(params_shape)
     grad_bytes = float(
-        sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize for l in leaves)
+        sum(
+            int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+            for leaf in leaves
+        )
     )
     return tune_gradient_buckets(
         grad_bytes=grad_bytes,

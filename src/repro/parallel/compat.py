@@ -2,10 +2,14 @@
 
 from __future__ import annotations
 
+from typing import Any
+
 import jax
 
 
-def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+def shard_map(
+    f: Any, *, mesh: Any, in_specs: Any, out_specs: Any, check_vma: bool = True
+) -> Any:
     """``jax.shard_map`` (new API) with fallback to ``jax.experimental``.
 
     Older JAX (< 0.5) only ships ``jax.experimental.shard_map.shard_map``,

@@ -13,8 +13,8 @@ production mesh). Axis conventions (DESIGN.md §3):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -66,7 +66,7 @@ class ParallelCtx:
     def divisible_by_tp(self, n: int) -> bool:
         return self.tp > 1 and n % self.tp == 0
 
-    def spec(self, *axes) -> P:
+    def spec(self, *axes: Any) -> P:
         """Build a PartitionSpec, dropping axes absent from the mesh.
 
         The literal string "model" is a SYMBOL resolving to ``model_axis``
@@ -75,7 +75,7 @@ class ParallelCtx:
         if self.mesh is None:
             return P()
 
-        def resolve(a):
+        def resolve(a: Any) -> Any:
             return self.model_axis if a == "model" else a
 
         cleaned = []
@@ -93,7 +93,7 @@ class ParallelCtx:
                 cleaned.append(r if r is not None and r in self.mesh.axis_names else None)
         return P(*cleaned)
 
-    def shard(self, x, *axes):
+    def shard(self, x: Any, *axes: Any) -> Any:
         """with_sharding_constraint; no-op without a mesh."""
         if self.mesh is None:
             return x
@@ -101,7 +101,7 @@ class ParallelCtx:
             x, NamedSharding(self.mesh, self.spec(*axes))
         )
 
-    def shard_residual(self, x):
+    def shard_residual(self, x: Any) -> Any:
         """Residual-stream constraint for [B, S, D] activations. Under
         Megatron-SP (seq_tp) the sequence dim shards over `model`, so the
         per-block psum lowers to reduce-scatter + all-gather (≈2× less
@@ -111,7 +111,7 @@ class ParallelCtx:
             return self.shard(x, self.batch_axes, "model", None)
         return self.shard(x, self.batch_axes, None, None)
 
-    def sharding(self, *axes) -> Optional[NamedSharding]:
+    def sharding(self, *axes: Any) -> Optional[NamedSharding]:
         if self.mesh is None:
             return None
         return NamedSharding(self.mesh, self.spec(*axes))

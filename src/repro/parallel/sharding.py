@@ -14,11 +14,10 @@ Conventions:
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.parallel.ctx import ParallelCtx
@@ -73,7 +72,7 @@ _MOE_RULES: Dict[str, Tuple] = {
 _MODEL_DIM_VECTORS = {"out_norm"}
 
 
-def _spec_for(path: Tuple, leaf, cfg: ArchConfig, pctx: ParallelCtx) -> P:
+def _spec_for(path: Tuple, leaf: Any, cfg: ArchConfig, pctx: ParallelCtx) -> P:
     keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
     keys = [k for k in keys if k is not None]
     name = keys[-1] if keys else ""
@@ -111,7 +110,7 @@ def _spec_for(path: Tuple, leaf, cfg: ArchConfig, pctx: ParallelCtx) -> P:
             axes.append(None)
 
     # never shard a dim that isn't divisible by its axis size
-    def size_of(ax):
+    def size_of(ax: Any) -> int:
         if isinstance(ax, tuple):
             n = 1
             for a in ax:
@@ -130,14 +129,16 @@ def _spec_for(path: Tuple, leaf, cfg: ArchConfig, pctx: ParallelCtx) -> P:
     return P(*final)
 
 
-def param_specs(params_shape: Any, cfg: ArchConfig, pctx: ParallelCtx):
+def param_specs(params_shape: Any, cfg: ArchConfig, pctx: ParallelCtx) -> Any:
     """Pytree of PartitionSpecs matching a params(-shape) pytree."""
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: _spec_for(path, leaf, cfg, pctx), params_shape
     )
 
 
-def batch_spec(cfg: ArchConfig, pctx: ParallelCtx, *, seq_sharded: bool = False):
+def batch_spec(
+    cfg: ArchConfig, pctx: ParallelCtx, *, seq_sharded: bool = False
+) -> Callable[[Tuple, Any], P]:
     """PartitionSpec factory for batch-dict leaves (data inputs AND caches).
 
     Cache leaves are recognized by name; their batch dim sits before a known
@@ -149,7 +150,7 @@ def batch_spec(cfg: ArchConfig, pctx: ParallelCtx, *, seq_sharded: bool = False)
     dp = pctx.dp
     tp = pctx.tp
 
-    def guard(shape, axes_tuple):
+    def guard(shape: Tuple, axes_tuple: Tuple) -> P:
         """Drop shardings that don't divide the dim."""
         out = []
         for dim, ax in zip(shape, axes_tuple):
@@ -165,7 +166,7 @@ def batch_spec(cfg: ArchConfig, pctx: ParallelCtx, *, seq_sharded: bool = False)
             out.append(ax if size and dim % size == 0 else None)
         return P(*out)
 
-    def spec_of(path, leaf) -> P:
+    def spec_of(path: Tuple, leaf: Any) -> P:
         keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
         name = next((k for k in reversed(keys) if isinstance(k, str)), "")
         shape = leaf.shape
@@ -212,12 +213,22 @@ def batch_spec(cfg: ArchConfig, pctx: ParallelCtx, *, seq_sharded: bool = False)
     return spec_of
 
 
-def make_train_shardings(params_shape, batch_shape, cfg: ArchConfig,
-                         pctx: ParallelCtx, *, seq_sharded: bool = False):
+def make_train_shardings(
+    params_shape: Any,
+    batch_shape: Any,
+    cfg: ArchConfig,
+    pctx: ParallelCtx,
+    *,
+    seq_sharded: bool = False,
+) -> Tuple[Any, Any]:
     """NamedShardings for (params, batch) pytrees under pctx.mesh."""
-    assert pctx.mesh is not None
+    mesh = pctx.mesh
+    assert mesh is not None
+
+    def to_sh(spec: P) -> NamedSharding:
+        return NamedSharding(mesh, spec)
+
     pspecs = param_specs(params_shape, cfg, pctx)
-    to_sh = lambda spec: NamedSharding(pctx.mesh, spec)
     p_sh = jax.tree.map(to_sh, pspecs)
     bs = batch_spec(cfg, pctx, seq_sharded=seq_sharded)
     b_sh = jax.tree_util.tree_map_with_path(

@@ -1,0 +1,164 @@
+"""Device-mesh resolution for the sharded tridiagonal solve.
+
+The partition method is embarrassingly parallel across chunks by construction
+— stage 1 and stage 3 touch only a chunk's own blocks plus one halo block,
+and only the tiny reduced system couples them — so the paper's "streams" map
+onto *devices* just as well as onto streams of one device.  This module owns
+the solver-facing mesh plumbing that :class:`repro.core.tridiag.plan
+.FusedExecutor` shards over:
+
+``resolve_mesh_devices``
+    normalises ``SolverConfig.mesh`` (``None`` | ``"auto"`` | device count |
+    ``jax.sharding.Mesh`` | explicit device sequence) to a concrete device
+    tuple, or ``None`` for the single-device path;
+``mesh_for``
+    builds (and caches) the 1-D :class:`~jax.sharding.Mesh` a sharded
+    executable runs under — axis :data:`MESH_AXIS_CHUNKS` for the
+    system-major block axis, :data:`MESH_AXIS_BATCH` for the interleaved
+    lane axis;
+``shard_count``
+    the divisibility rule: the largest shard count ``<= limit`` that divides
+    the axis being sharded (``shard_map`` needs equal per-device slices, and
+    the solver never pads the block axis);
+``mesh_signature``
+    a hashable device-set signature for the executable-cache key and
+    ``session.stats`` (sharded and unsharded executables must never collide).
+
+Everything here is host-side bookkeeping — the collectives themselves
+(``ppermute`` halo exchange, reduced-rows ``all_gather``) are traced into the
+fused executable by ``plan._fused_callable``.  On CPU containers the whole
+path is exercised under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(see ``tests/conftest.py`` and ``benchmarks/sharded_throughput.py``).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = [
+    "MESH_AXIS_BATCH",
+    "MESH_AXIS_CHUNKS",
+    "MeshSpec",
+    "clear_mesh_cache",
+    "mesh_for",
+    "mesh_signature",
+    "resolve_mesh_devices",
+    "shard_count",
+]
+
+#: Mesh axis name over which the fused block axis (system-major layout)
+#: shards: each device owns a contiguous run of partition blocks.
+MESH_AXIS_CHUNKS = "chunks"
+
+#: Mesh axis name over which the interleaved batch (lane) axis shards: each
+#: device owns a contiguous run of systems, and the wide pipeline needs no
+#: collectives at all (the per-lane reduced scans are already independent).
+MESH_AXIS_BATCH = "batch"
+
+#: What ``SolverConfig.mesh`` accepts: ``None`` (single device), ``"auto"``
+#: (shard iff more than one device is visible), an ``int`` device count, a
+#: 1-D ``jax.sharding.Mesh``, or an explicit device sequence.
+MeshSpec = Any
+
+
+def resolve_mesh_devices(spec: MeshSpec) -> Optional[Tuple[Any, ...]]:
+    """Normalise a mesh spec to the device tuple sharded solves may use.
+
+    Returns ``None`` for every single-device outcome (``spec=None``, one
+    visible device, an explicit count of 1), so callers can treat ``None``
+    as "today's unsharded path, bit for bit".  Raises ``ValueError`` with an
+    actionable message for a count exceeding the visible devices.
+    """
+    if spec is None:
+        return None
+    if isinstance(spec, str):
+        if spec != "auto":
+            raise ValueError(
+                f"mesh={spec!r}: the only string spec is 'auto' (shard when "
+                f"more than one device is visible); pass None, an int device "
+                f"count, or a jax.sharding.Mesh"
+            )
+        devices = tuple(jax.devices())
+        return devices if len(devices) > 1 else None
+    if isinstance(spec, (int, np.integer)):
+        count = int(spec)
+        if count < 1:
+            raise ValueError(f"mesh={count}: device count must be >= 1")
+        devices = tuple(jax.devices())
+        if count > len(devices):
+            raise ValueError(
+                f"mesh={count}: only {len(devices)} device(s) visible "
+                f"(on CPU, force more with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=N before jax "
+                f"initialises)"
+            )
+        return devices[:count] if count > 1 else None
+    if isinstance(spec, Mesh):
+        devices = tuple(spec.devices.flat)
+        return devices if len(devices) > 1 else None
+    if isinstance(spec, Sequence):
+        devices = tuple(spec)
+        return devices if len(devices) > 1 else None
+    raise TypeError(
+        f"mesh must be None, 'auto', an int device count, a "
+        f"jax.sharding.Mesh or a device sequence, got {spec!r}"
+    )
+
+
+def mesh_signature(
+    devices: Optional[Sequence[Any]],
+) -> Optional[Tuple[Tuple[str, int], ...]]:
+    """Hashable identity of a device set (``None`` for the unsharded path).
+
+    Keys the fused-executable cache: two sessions sharding over different
+    device sets (or one sharded and one not) must never share an executable.
+    """
+    if devices is None:
+        return None
+    return tuple((d.platform, d.id) for d in devices)
+
+
+def shard_count(total: int, limit: int) -> int:
+    """Largest shard count ``<= limit`` that divides ``total`` (>= 1).
+
+    ``shard_map`` splits an axis into equal per-device slices, and the solver
+    never pads the fused block axis — so an axis of ``total`` elements shards
+    over the largest divisor within the device budget, falling back to 1
+    (unsharded) when ``total`` is prime w.r.t. every usable count.
+    """
+    if total < 1 or limit < 2:
+        return 1
+    for k in range(min(limit, total), 0, -1):
+        if total % k == 0:
+            return k
+    return 1
+
+
+# Meshes are tiny but jax Mesh construction is not free, and one executable
+# cache can hold many entries over the same few device sets — so meshes are
+# memoised by (device signature, axis name). Sessions build executables from
+# caller + worker threads concurrently, hence the lock.
+_MESH_LOCK = threading.Lock()
+_MESH_CACHE: Dict[Tuple[Any, str], Mesh] = {}
+
+
+def mesh_for(devices: Sequence[Any], axis: str) -> Mesh:
+    """The cached 1-D :class:`Mesh` over ``devices`` with one named ``axis``."""
+    key = (mesh_signature(devices), axis)
+    with _MESH_LOCK:
+        mesh = _MESH_CACHE.get(key)
+        if mesh is None:
+            mesh = Mesh(np.array(list(devices)), (axis,))
+            _MESH_CACHE[key] = mesh
+        return mesh
+
+
+def clear_mesh_cache() -> None:
+    """Empty the mesh memo (test isolation hook)."""
+    with _MESH_LOCK:
+        _MESH_CACHE.clear()

@@ -1,0 +1,42 @@
+"""Shared test rig: the multi-device CPU environment for sharded solves.
+
+jax reads ``XLA_FLAGS`` when its backend first initialises, so the forced
+host-device count must be exported *before* any test module imports jax.
+pytest imports ``conftest.py`` first, which makes this the one reliable
+place for a session-scoped environment guard — no subprocess layer needed,
+and the whole suite (sharded and single-device tests alike) runs under one
+8-device CPU topology, exactly the environment the sharded-solve CI gate
+uses. ``mesh=None`` paths are explicitly tested to be bit-identical to the
+single-device build, so forcing the topology for everyone is safe.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import pytest
+
+FORCED_HOST_DEVICES = 8
+
+if "jax" not in sys.modules:
+    _flag = f"--xla_force_host_platform_device_count={FORCED_HOST_DEVICES}"
+    _existing = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _existing:
+        os.environ["XLA_FLAGS"] = f"{_existing} {_flag}".strip()
+
+
+@pytest.fixture(scope="session")
+def multi_device_count() -> int:
+    """Visible device count; skips the test when the topology is single-device
+    (e.g. jax was pre-imported by an embedding process before the guard)."""
+    import jax
+
+    count = jax.device_count()
+    if count < 2:
+        pytest.skip(
+            f"multi-device test needs >= 2 devices, have {count} "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{FORCED_HOST_DEVICES} before jax initialises)"
+        )
+    return count

@@ -509,3 +509,60 @@ def test_default_registry_covers_telemetry_state():
     for e in ring + refit:
         assert e.guards == ("_lock",)
         assert (REPO / "src" / e.module).exists()
+
+# ----------------------------------- TRD001/TRD002: sharded-solver entries --
+PARALLEL_SOLVER_PATH = "src/repro/parallel/solver.py"
+
+
+def test_trd001_mesh_cache_bad_unguarded_touch():
+    """The real DEFAULT_REGISTRY entry fires when the mesh memo is touched
+    outside its lock (it is populated from caller and worker threads)."""
+    found = check_source(
+        "def lookup(key):\n"
+        "    return _MESH_CACHE.get(key)\n",
+        PARALLEL_SOLVER_PATH,
+        registry=DEFAULT_REGISTRY,
+        select=["TRD001"],
+    )
+    assert found and set(codes(found)) == {"TRD001"}
+    assert "_MESH_CACHE" in found[0].message
+
+
+def test_trd001_mesh_cache_good_under_lock():
+    found = check_source(
+        "_MESH_CACHE = {}\n"  # definition site is exempt
+        "def lookup(key):\n"
+        "    with _MESH_LOCK:\n"
+        "        return _MESH_CACHE.get(key)\n",
+        PARALLEL_SOLVER_PATH,
+        registry=DEFAULT_REGISTRY,
+        select=["TRD001"],
+    )
+    assert found == []
+
+
+def test_default_registry_covers_mesh_cache():
+    """Wiring test: the registry names the mesh memo the real module guards."""
+    entries = [
+        e
+        for e in DEFAULT_REGISTRY.guarded_globals
+        if e.module.endswith("repro/parallel/solver.py")
+    ]
+    assert entries and entries[0].names == ("_MESH_CACHE",)
+    assert entries[0].guards == ("_MESH_LOCK",)
+    assert (REPO / "src" / entries[0].module).exists()
+
+
+def test_trd002_covers_mesh_constructed_executor():
+    """Donation discipline holds for the sharded path: a FusedExecutor built
+    with a mesh still donates its operands (only donate=False disables), so
+    reuse after a sharded execute must keep firing TRD002."""
+    found = run(
+        "def go(plan, d, devices):\n"
+        "    ex = FusedExecutor('pallas', mesh=devices)\n"
+        "    ops = jnp.asarray(d)\n"
+        "    ex.execute(plan, ops, ops, ops, ops)\n"
+        "    return ops.sum()\n",
+        select="TRD002",
+    )
+    assert codes(found) == ["TRD002"]
